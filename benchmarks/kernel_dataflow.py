@@ -1,0 +1,94 @@
+"""Kernel-level flex benchmark: HBM-traffic model + interpret-mode timing.
+
+The TPU-native analogue of Table I: for each LM architecture, total modelled
+HBM bytes under each static dataflow vs. the CMU per-layer plan, plus
+wall-clock interpret-mode timings of the three Pallas kernels at a
+representative shape (CPU timings are NOT TPU performance — they validate
+dispatch and give a relative sanity check only; the traffic model is the
+perf claim)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALL_DATAFLOWS, GemmShape, static_vs_flex_traffic
+from repro.kernels import flex_matmul
+from repro.models.registry import ARCHS, get_config
+
+
+def arch_gemms(arch: str, tokens: int = 8192) -> list[GemmShape]:
+    """Per-layer GEMMs of one transformer block + embedding heads."""
+    cfg = get_config(arch)
+    D, M = cfg.d_model, tokens
+    gs = [
+        GemmShape(M, D, cfg.q_dim, name="wq"),
+        GemmShape(M, D, cfg.kv_dim, name="wk"),
+        GemmShape(M, D, cfg.kv_dim, name="wv"),
+        GemmShape(M, cfg.q_dim, D, name="wo"),
+    ]
+    if cfg.family == "moe":
+        e_ff = cfg.expert_d_ff or cfg.d_ff
+        cap = tokens * cfg.top_k // cfg.num_experts
+        gs += [
+            GemmShape(M, D, cfg.num_experts, name="router"),
+            GemmShape(max(cap, 1), D, e_ff, name="we1"),
+            GemmShape(max(cap, 1), e_ff, D, name="we2"),
+        ]
+    else:
+        gs += [
+            GemmShape(M, D, cfg.d_ff, name="w1"),
+            GemmShape(M, cfg.d_ff, D, name="w2"),
+        ]
+    gs.append(GemmShape(M, D, cfg.padded_vocab, name="lm_head"))
+    return gs
+
+
+def traffic_table(tokens: int = 8192):
+    rows = []
+    for arch in ARCHS:
+        t0 = time.perf_counter()
+        tot = static_vs_flex_traffic(arch_gemms(arch, tokens))
+        us = (time.perf_counter() - t0) * 1e6
+        best_static = min(tot[d.name] for d in ALL_DATAFLOWS)
+        rows.append(
+            (
+                f"kernel_traffic/{arch}",
+                {
+                    "us_per_call": us,
+                    **{f"{d.name}_GB": round(tot[d.name] / 1e9, 3) for d in ALL_DATAFLOWS},
+                    "FLEX_GB": round(tot["FLEX"] / 1e9, 3),
+                    "flex_vs_best_static": round(best_static / tot["FLEX"], 4),
+                    "flex_vs_worst_static": round(
+                        max(tot[d.name] for d in ALL_DATAFLOWS) / tot["FLEX"], 4
+                    ),
+                },
+            )
+        )
+    return rows
+
+
+def kernel_timing(M=512, K=512, N=512, block=(128, 128, 128), iters=3):
+    """interpret=True wall time per dataflow (dispatch validation only)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    rows = []
+    for df in ALL_DATAFLOWS:
+        out = flex_matmul(a, b, dataflow=df, block=block, interpret=True)
+        out.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            flex_matmul(a, b, dataflow=df, block=block, interpret=True).block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append(
+            (
+                f"kernel_interp/{df.name}",
+                {"us_per_call": round(us, 1), "M": M, "K": K, "N": N,
+                 "max_abs_err": float(jnp.abs(out - a @ b).max())},
+            )
+        )
+    return rows

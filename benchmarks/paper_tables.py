@@ -1,0 +1,145 @@
+"""Benchmarks reproducing each paper table/figure (Table I, Table II,
+Fig. 1, Fig. 6, Fig. 7).  Each returns rows of (name, value-dict) and is
+wrapped by benchmarks.run for CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    Dataflow,
+    PAPER_TABLE1,
+    PAPER_TABLE2,
+    WORKLOADS,
+    layer_cycle_table,
+    overheads,
+    simulate_network,
+    synthesize,
+)
+
+# Critical-path delays (ns) used by the paper for Fig. 6 execution times.
+TPU_DELAY_NS = 6.63
+FLEX_DELAY_NS = 6.69
+
+
+def table1_cycles(array: int = 32):
+    """Table I: flex vs static cycles + speedups, S=32x32."""
+    rows = []
+    for name, layers in WORKLOADS.items():
+        t0 = time.perf_counter()
+        r = simulate_network(name, layers, array)
+        us = (time.perf_counter() - t0) * 1e6
+        row = {
+            "us_per_call": us,
+            "flex_cycles": r.flex_cycles,
+            "paper_flex_cycles": PAPER_TABLE1[name]["flex"],
+        }
+        for df in ALL_DATAFLOWS:
+            row[f"{df.name}_cycles"] = r.static_cycles(df)
+            row[f"speedup_vs_{df.name}"] = round(r.speedup(df), 3)
+            row[f"paper_speedup_vs_{df.name}"] = round(
+                PAPER_TABLE1[name][df.name] / PAPER_TABLE1[name]["flex"], 3
+            )
+        rows.append((f"table1/{name}", row))
+    return rows
+
+
+def table2_area_power():
+    """Table II: area/power/delay + overheads for S=8/16/32 (+128 extrap)."""
+    rows = []
+    for S in (8, 16, 32, 128):
+        t0 = time.perf_counter()
+        base, fx, o = synthesize(S), synthesize(S, flex=True), overheads(S)
+        us = (time.perf_counter() - t0) * 1e6
+        ref = PAPER_TABLE2.get(S)
+        rows.append(
+            (
+                f"table2/S{S}",
+                {
+                    "us_per_call": us,
+                    "tpu_area_mm2": round(base.area_mm2, 4),
+                    "flex_area_mm2": round(fx.area_mm2, 4),
+                    "area_overhead_pct": round(o.area_pct, 2),
+                    "paper_area_overhead_pct": ref["overhead"]["area"] if ref else None,
+                    "tpu_power_mw": round(base.power_mw, 3),
+                    "flex_power_mw": round(fx.power_mw, 3),
+                    "power_overhead_pct": round(o.power_pct, 2),
+                    "paper_power_overhead_pct": ref["overhead"]["power"] if ref else None,
+                    "delay_overhead_pct": round(o.delay_pct, 2),
+                },
+            )
+        )
+    return rows
+
+
+def fig1_resnet_layers(array: int = 32):
+    """Fig. 1: per-layer cycles for IS/OS/WS on ResNet-18 + the flex choice."""
+    t0 = time.perf_counter()
+    r = simulate_network("resnet18", WORKLOADS["resnet18"], array)
+    us = (time.perf_counter() - t0) * 1e6
+    tbl = layer_cycle_table(r)
+    rows = []
+    for i, l in enumerate(r.layers):
+        rows.append(
+            (
+                f"fig1/{l.name}",
+                {
+                    "us_per_call": us / len(r.layers),
+                    "IS": int(tbl[i, 0]),
+                    "OS": int(tbl[i, 1]),
+                    "WS": int(tbl[i, 2]),
+                    "best": l.best[0].name,
+                },
+            )
+        )
+    return rows
+
+
+def fig6_exec_time(array: int = 32):
+    """Fig. 6: wall-clock execution time per model (cycles x critical path)."""
+    rows = []
+    for name, layers in WORKLOADS.items():
+        if name == "vgg13":
+            continue  # paper omits VGG from Fig. 6 for scale
+        t0 = time.perf_counter()
+        r = simulate_network(name, layers, array)
+        us = (time.perf_counter() - t0) * 1e6
+        row = {"us_per_call": us, "flex_ms": round(r.flex_cycles * FLEX_DELAY_NS * 1e-6, 3)}
+        for df in ALL_DATAFLOWS:
+            row[f"{df.name}_ms"] = round(r.static_cycles(df) * TPU_DELAY_NS * 1e-6, 3)
+        row["best_static_ms"] = min(row[f"{df.name}_ms"] for df in ALL_DATAFLOWS)
+        row["saved_ms_vs_worst"] = round(
+            max(row[f"{df.name}_ms"] for df in ALL_DATAFLOWS) - row["flex_ms"], 3
+        )
+        rows.append((f"fig6/{name}", row))
+    return rows
+
+
+def fig7_scalability():
+    """Fig. 7: average flex speedup vs static-OS at S=32/128/256."""
+    rows = []
+    for S in (32, 128, 256):
+        t0 = time.perf_counter()
+        sp = {df: [] for df in ALL_DATAFLOWS}
+        for name, layers in WORKLOADS.items():
+            r = simulate_network(name, layers, S)
+            for df in ALL_DATAFLOWS:
+                sp[df].append(r.speedup(df))
+        us = (time.perf_counter() - t0) * 1e6
+        paper_os = {32: 1.090, 128: 1.238, 256: 1.349}
+        rows.append(
+            (
+                f"fig7/S{S}",
+                {
+                    "us_per_call": us,
+                    "avg_speedup_vs_OS": round(float(np.mean(sp[Dataflow.OS])), 3),
+                    "paper_avg_speedup_vs_OS": paper_os[S],
+                    "avg_speedup_vs_IS": round(float(np.mean(sp[Dataflow.IS])), 3),
+                    "avg_speedup_vs_WS": round(float(np.mean(sp[Dataflow.WS])), 3),
+                },
+            )
+        )
+    return rows

@@ -1,0 +1,188 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis per (arch x shape) on the single-pod production mesh.
+
+Three terms per cell (DESIGN.md §6):
+  compute_s    = HLO_FLOPs_per_chip / 197e12
+  memory_s     = HLO_bytes_per_chip / 819e9
+  collective_s = collective_bytes_per_chip / 50e9
+
+XLA's cost analysis counts while-loop bodies ONCE, so scanned layer stacks
+would be undercounted ~L-fold.  This harness therefore lowers UNROLLED
+reduced-depth probes (1 and 2 layer-groups, full shapes, attention chunk
+scans unrolled) and extrapolates linearly in depth — exact because every
+group is structurally identical.  Interior SSM chunk scans stay rolled and
+are corrected analytically (`ssm_chunk_correction`).  MODEL_FLOPS uses the
+spec convention 6·N_active·tokens (train) / 2·N_active·tokens (inference).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--cells a,b] [--out DIR]
+"""
+
+import argparse
+import json
+import time
+from typing import Any
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256  # single-pod 16x16
+
+
+def probe_plan(cfg) -> list[tuple[dict, float]]:
+    """[(override, weight)] s.t. total_cost = sum(weight_i * C(override_i)).
+
+    For a stack of G identical groups: C(G) = C1 + (G-1)*(C2-C1)
+                                            = (2-G)*C1 + (G-1)*C2.
+    """
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        pat = len(cfg.window_pattern)
+        G = cfg.num_layers // pat
+        return [({"num_layers": pat}, 2.0 - G), ({"num_layers": 2 * pat}, G - 1.0)]
+    if fam == "ssm":
+        G = cfg.num_layers
+        return [({"num_layers": 1}, 2.0 - G), ({"num_layers": 2}, G - 1.0)]
+    if fam == "hybrid":
+        k = cfg.attn_every
+        G = cfg.num_layers / k
+        return [({"num_layers": k}, 2.0 - G), ({"num_layers": 2 * k}, G - 1.0)]
+    if fam == "encdec":
+        E, D = cfg.num_enc_layers, cfg.num_layers
+        base = {"num_enc_layers": 1, "num_layers": 1}
+        return [
+            (dict(base), 1.0 - (E - 1.0) - (D - 1.0)),
+            ({"num_enc_layers": 2, "num_layers": 1}, E - 1.0),
+            ({"num_enc_layers": 1, "num_layers": 2}, D - 1.0),
+        ]
+    raise ValueError(fam)
+
+
+def ssm_chunk_correction(cfg, cell, num_layers: int) -> float:
+    """FLOPs of the rolled interior chunk-scan bodies beyond the one counted.
+
+    Per chunk body (chunked_diag_linear_attn): scores 2BHL²N, intra-out
+    2BHL²M, state-read 2BHLNM, state-update 2BHLNM  (L = LA_CHUNK = 16).
+    """
+    from repro.models.ssm import LA_CHUNK
+
+    if cell.step == "decode":
+        return 0.0
+    B, T, L = cell.global_batch, cell.seq_len, LA_CHUNK
+    chunks = T // L
+    if cfg.family == "ssm":
+        H, N = cfg.rwkv_heads, cfg.rwkv_head_size
+        M = N
+        per_chunk = 2 * B * H * (L * L * N + L * L * M + 2 * L * N * M)
+        return num_layers * (chunks - 1) * per_chunk
+    if cfg.family == "hybrid":
+        H, N, M = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        per_chunk = 2 * B * H * (L * L * N + L * L * M + 2 * L * N * M)
+        return num_layers * (chunks - 1) * per_chunk
+    return 0.0
+
+
+def model_flops(cfg, cell) -> float:
+    total, active = cfg.param_count()
+    if cell.step == "train":
+        return 6.0 * active * cell.global_batch * cell.seq_len
+    if cell.step == "prefill":
+        return 2.0 * active * cell.global_batch * cell.seq_len
+    return 2.0 * active * cell.global_batch  # decode: per generated token
+
+
+def probe_cell(arch: str, shape: str, rules=None, microbatches=1) -> dict[str, Any]:
+    """Extrapolated per-chip HLO flops / bytes / collective bytes for a cell."""
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.specs import model_for_cell
+
+    model, cell = model_for_cell(arch, shape)
+    cfg = model.cfg
+    tot = {"hlo_flops": 0.0, "hlo_bytes": 0.0, "coll_bytes": 0.0, "coll": {}}
+    for overrides, w in probe_plan(cfg):
+        ov = dict(overrides, attn_unroll=True)
+        rec = lower_cell(
+            arch, shape, overrides=ov, unroll=True, rules=rules,
+            microbatches=microbatches,
+        )
+        nl = ov.get("num_layers", cfg.num_layers)
+        corr = ssm_chunk_correction(cfg, cell, nl) / CHIPS
+        if cell.step == "train":
+            corr *= 3  # fwd + bwd
+        tot["hlo_flops"] += w * (rec["hlo_flops"] + corr)
+        tot["hlo_bytes"] += w * rec["hlo_bytes"]
+        cb = sum(v["bytes"] for v in rec["collectives"].values())
+        tot["coll_bytes"] += w * cb
+        for k, v in rec["collectives"].items():
+            tot["coll"][k] = tot["coll"].get(k, 0.0) + w * v["bytes"]
+    return tot
+
+
+def roofline_terms(tot: dict[str, Any]) -> dict[str, float]:
+    return {
+        "compute_s": tot["hlo_flops"] / PEAK_FLOPS,
+        "memory_s": tot["hlo_bytes"] / HBM_BW,
+        "collective_s": tot["coll_bytes"] / ICI_BW,
+    }
+
+
+def analyse_cell(arch: str, shape: str, rules=None, microbatches=1) -> dict[str, Any]:
+    from repro.launch.specs import model_for_cell
+
+    model, cell = model_for_cell(arch, shape)
+    t0 = time.time()
+    tot = probe_cell(arch, shape, rules=rules, microbatches=microbatches)
+    terms = roofline_terms(tot)
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cell=cell, cfg=model.cfg)
+    hlo_total = tot["hlo_flops"] * CHIPS
+    rec = {
+        "arch": arch, "shape": shape, "step": cell.step,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": round(mf / hlo_total, 4) if hlo_total else None,
+        "roofline_fraction": round(
+            max(terms["compute_s"], 1e-12) / max(sum(terms.values()), 1e-12), 4
+        ),
+        "coll_breakdown_GB": {k: round(v / 1e9, 3) for k, v in tot["coll"].items() if v},
+        "probe_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    from repro.configs import all_cells
+
+    cells = (
+        [tuple(c.split(":")) for c in args.cells.split(",")]
+        if args.cells
+        else all_cells()
+    )
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in cells:
+        path = os.path.join(args.out, f"{arch}__{shape}.json")
+        if os.path.exists(path):
+            print(f"CACHED {arch} x {shape}")
+            continue
+        try:
+            rec = analyse_cell(arch, shape)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"OK {arch:16s} {shape:12s} comp {rec['compute_s']:.4f}s "
+                f"mem {rec['memory_s']:.4f}s coll {rec['collective_s']:.4f}s "
+                f"dom={rec['dominant'][:-2]:10s} useful={rec['useful_ratio']}"
+            )
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {arch} x {shape}: {str(e)[:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the headline value
+each table argues from), then a JSON dump with all columns to
+results/bench/.  Heavy 512-device artefacts (dry-run, roofline) run via
+their own modules; this driver summarises their cached results when present.
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _emit(rows, derived_key):
+    for name, row in rows:
+        print(f"{name},{row['us_per_call']:.1f},{row.get(derived_key)}")
+    return rows
+
+
+def main() -> None:
+    from benchmarks import kernel_dataflow, paper_tables
+
+    all_rows: list = []
+    print("name,us_per_call,derived")
+
+    all_rows += _emit(paper_tables.table1_cycles(), "speedup_vs_OS")
+    all_rows += _emit(paper_tables.table2_area_power(), "area_overhead_pct")
+    all_rows += _emit(paper_tables.fig1_resnet_layers(), "best")
+    all_rows += _emit(paper_tables.fig6_exec_time(), "flex_ms")
+    all_rows += _emit(paper_tables.fig7_scalability(), "avg_speedup_vs_OS")
+    all_rows += _emit(kernel_dataflow.traffic_table(), "flex_vs_worst_static")
+    all_rows += _emit(kernel_dataflow.kernel_timing(), "max_abs_err")
+
+    # summarise cached 512-device artefacts if present
+    for pattern, tag, keys in [
+        ("results/dryrun/*.json", "dryrun",
+         ("compile_s", "mem_temp_size_in_bytes", "hlo_flops")),
+        ("results/roofline/*.json", "roofline",
+         ("compute_s", "memory_s", "collective_s", "dominant", "useful_ratio")),
+    ]:
+        for path in sorted(glob.glob(pattern)):
+            with open(path) as f:
+                rec = json.load(f)
+            name = os.path.basename(path)[:-5]
+            row = {"us_per_call": 0.0, **{k: rec.get(k) for k in keys}}
+            derived = rec.get("dominant", rec.get("compile_s"))
+            print(f"{tag}/{name},0.0,{derived}")
+            all_rows.append((f"{tag}/{name}", row))
+
+    os.makedirs("results/bench", exist_ok=True)
+    with open("results/bench/all.json", "w") as f:
+        json.dump([{"name": n, **r} for n, r in all_rows], f, indent=1)
+    print(f"\n{len(all_rows)} benchmark rows -> results/bench/all.json")
+
+
+if __name__ == "__main__":
+    main()

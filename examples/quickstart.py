@@ -1,0 +1,36 @@
+"""Quickstart: the Flex-TPU reproduction in one minute.
+
+Simulates ResNet-18 on a 32x32 systolic array under all three static
+dataflows and the Flex (per-layer CMU) schedule, prints Table-I-style
+numbers, then runs the three Pallas dataflow kernels on CPU (interpret).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALL_DATAFLOWS, Dataflow, WORKLOADS, overheads, simulate_network
+from repro.kernels import flex_matmul, matmul_ref
+
+# 1. the paper's experiment: per-layer dataflow choice beats any static one
+r = simulate_network("resnet18", WORKLOADS["resnet18"], 32)
+print("ResNet-18 @ 32x32 systolic array")
+for df in ALL_DATAFLOWS:
+    print(f"  static {df.name}: {r.static_cycles(df):>9,} cycles "
+          f"(flex speedup {r.speedup(df):.3f}x)")
+print(f"  FLEX       : {r.flex_cycles:>9,} cycles")
+print(f"  per-layer schedule: {[d.name for d in r.flex_schedule]}")
+
+# 2. the hardware cost of flexibility (Table II)
+o = overheads(32)
+print(f"\nFlex-TPU overhead @32x32: area +{o.area_pct:.1f}%  "
+      f"power +{o.power_pct:.1f}%  critical path +{o.delay_pct:.2f}%")
+
+# 3. the same idea on a real TPU: three Pallas kernels, one MAC, three
+#    block schedules (validated in interpret mode on CPU)
+a = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)), jnp.float32)
+b = jnp.asarray(np.random.default_rng(1).normal(size=(256, 256)), jnp.float32)
+ref = matmul_ref(a, b)
+for df in ALL_DATAFLOWS:
+    out = flex_matmul(a, b, dataflow=df, block=(128, 128, 128), interpret=True)
+    print(f"pallas {df.name}: max|err| = {float(jnp.abs(out-ref).max()):.2e}")

@@ -1,0 +1,15 @@
+"""Sharded checkpointing with manifest, async writes, and elastic restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json   {step, leaf paths, shapes, dtypes, config_hash, rng}
+           <leaf>.npy      one file per pytree leaf (the per-shard unit)
+
+Restore re-shards automatically: arrays are loaded on host then device_put
+with the *current* mesh's shardings, so a checkpoint written on a 16x16 mesh
+restores onto 8x16 (elastic downsize) or 2x16x16 (pod scale-out) unchanged —
+this is the elastic-scaling mechanism exercised in tests/test_checkpoint.py.
+"""
+
+from .store import latest_step, load_checkpoint, save_checkpoint
+
+__all__ = ["latest_step", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,104 @@
+"""Checkpoint store: npy-per-leaf + JSON manifest, atomic rename commits."""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _leaf_paths(tree: Params) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "_".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", "x"))))
+            for k in path
+        )
+        out.append((re.sub(r"[^A-Za-z0-9_.-]", "_", name) or "root", leaf))
+    return out
+
+
+def config_hash(obj: Any) -> str:
+    return hashlib.sha1(repr(obj).encode()).hexdigest()[:12]
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Params,
+    *,
+    extra: dict | None = None,
+    async_write: bool = False,
+) -> str:
+    """Write <dir>/step_<N>; commit via atomic rename from a .tmp dir."""
+
+    # Pull to host before handing to a writer thread (donated buffers safe).
+    host = jax.tree.map(lambda a: np.asarray(a), tree)
+
+    def _write():
+        tmp = os.path.join(directory, f".tmp_step_{step}")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        leaves = _leaf_paths(host)
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        for name, leaf in leaves:
+            arr = np.asarray(leaf)
+            np.save(os.path.join(tmp, f"{name}.npy"), arr)
+            manifest["leaves"].append(
+                {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return os.path.join(directory, f"step_{step}")
+    _write()
+    return os.path.join(directory, f"step_{step}")
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_", 1)[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and os.path.exists(os.path.join(directory, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    directory: str,
+    step: int,
+    like: Params,
+    *,
+    shardings: Params | None = None,
+) -> tuple[Params, dict]:
+    """Load into the structure of ``like``; re-shard with ``shardings`` if given."""
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = [n for n, _ in _leaf_paths(like)]
+    leaves = []
+    for name in names:
+        leaves.append(np.load(os.path.join(d, f"{name}.npy")))
+    treedef = jax.tree_util.tree_structure(like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest.get("extra", {})

@@ -1,0 +1,37 @@
+"""Assigned architecture configs and (arch x shape) cell definitions."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM / hybrid /
+# local-attention-dominant archs (DESIGN.md §4); pure full-attention skips.
+LONG_CONTEXT_ARCHS = {"zamba2_7b", "rwkv6_7b", "gemma3_12b"}
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.models.registry import ARCHS
+
+    return [(a, s) for a in ARCHS for s in SHAPES if applicable(a, s)]

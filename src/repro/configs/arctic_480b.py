@@ -1,0 +1,26 @@
+"""arctic-480b [moe]: 35L, d=7168, 56H (GQA kv=8), vocab=32000.
+
+Dense-MoE hybrid: every layer has a dense FFN residual branch in parallel
+with a 128-expert top-2 MoE (expert d_ff=4864). [hf:Snowflake/snowflake-arctic-base]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic_480b", family="moe",
+        num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=4864, expert_d_ff=4864, moe_dense_ff=4864,
+        num_experts=128, top_k=2, vocab_size=32000,
+        max_seq_len=32768,
+        # 480B on one 256-chip pod: bf16 params + int8 moments (DESIGN.md §5)
+        param_dtype="bfloat16",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=96,
+        expert_d_ff=96, moe_dense_ff=96, num_experts=8, top_k=2,
+        vocab_size=256, max_seq_len=128, attn_chunk=16,
+    )

@@ -1,0 +1,28 @@
+"""gemma3-12b [dense]: 48L, d=3840, 16H (GQA kv=8), d_ff=15360, vocab=262144.
+
+5 local (1024-window) : 1 global attention pattern, qk_norm, GeGLU,
+embed scale sqrt(d), 128k+ context. [hf:google/gemma-3-1b-pt]
+"""
+import math
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3_12b", family="dense",
+        num_layers=48, d_model=3840, num_heads=16, num_kv_heads=8,
+        head_dim=256, d_ff=15360, vocab_size=262144,
+        qk_norm=True, activation="gelu",
+        window_pattern=(1024, 1024, 1024, 1024, 1024, 0),
+        emb_scale=math.sqrt(3840.0), rope_theta=1e6,
+        max_seq_len=524288, logit_softcap=0.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, window_pattern=(8, 0),
+        emb_scale=8.0, max_seq_len=128, attn_chunk=16,
+    )

@@ -1,0 +1,28 @@
+"""paligemma-3b [vlm]: 18L, d=2048, 8H (GQA kv=1), d_ff=16384, vocab=257216.
+
+SigLIP frontend is a STUB: input_specs provide patch embeddings
+(B, 256, 1152) projected into the gemma backbone. [arXiv:2407.07726]
+"""
+import math
+
+from repro.models.config import ModelConfig
+
+VISION_EMBED_DIM = 1152
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma_3b", family="vlm",
+        num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+        head_dim=256, d_ff=16384, vocab_size=257216,
+        activation="gelu", vision_tokens=256, vision_embed_dim=VISION_EMBED_DIM, emb_scale=math.sqrt(2048.0),
+        max_seq_len=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=256, vision_tokens=8, emb_scale=8.0,
+        max_seq_len=128, attn_chunk=16,
+    )

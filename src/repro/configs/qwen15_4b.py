@@ -1,0 +1,21 @@
+"""qwen1.5-4b [dense]: 40L, d=2560, 20H (kv=20), d_ff=6912, vocab=151936.
+
+QKV bias. [hf:Qwen/Qwen1.5-0.5B]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen15_4b", family="dense",
+        num_layers=40, d_model=2560, num_heads=20, num_kv_heads=20,
+        d_ff=6912, vocab_size=151936, qkv_bias=True, rope_theta=1e6,
+        max_seq_len=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=256, max_seq_len=128, attn_chunk=16,
+    )

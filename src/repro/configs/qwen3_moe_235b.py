@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [moe]: 94L, d=4096, 64H (GQA kv=4), vocab=151936.
+
+128 experts top-8, expert d_ff=1536, qk_norm. [hf:Qwen/Qwen3-30B-A3B]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3_moe_235b", family="moe",
+        num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+        head_dim=128, d_ff=1536, expert_d_ff=1536,
+        num_experts=128, top_k=8, vocab_size=151936, qk_norm=True,
+        rope_theta=1e6, max_seq_len=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=96, expert_d_ff=96, num_experts=8, top_k=2,
+        vocab_size=256, max_seq_len=128, attn_chunk=16,
+    )

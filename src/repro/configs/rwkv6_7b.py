@@ -1,0 +1,22 @@
+"""rwkv6-7b [ssm] "Finch": 32L, d=4096, attention-free, d_ff=14336, vocab=65536.
+
+Data-dependent decay via low-rank projection. [arXiv:2404.05892]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6_7b", family="ssm",
+        num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+        d_ff=14336, vocab_size=65536, rwkv_head_size=64, rwkv_decay_lora=64,
+        max_seq_len=524288,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=256, rwkv_head_size=16, rwkv_decay_lora=8,
+        max_seq_len=128, attn_chunk=16,
+    )

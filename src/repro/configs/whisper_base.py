@@ -1,0 +1,23 @@
+"""whisper-base [audio]: 6L enc-dec, d=512, 8H, d_ff=2048, vocab=51865.
+
+Conv audio frontend is a STUB: input_specs provide precomputed frame
+embeddings (B, 1500, 512).  [arXiv:2212.04356]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_base", family="encdec",
+        num_layers=6, num_enc_layers=6, d_model=512,
+        num_heads=8, num_kv_heads=8, d_ff=2048, vocab_size=51865,
+        norm="layernorm", activation="gelu_mlp", enc_seq_len=1500,
+        max_seq_len=32768,  # shape-coverage override of whisper's native 448
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, num_enc_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=256, enc_seq_len=32, max_seq_len=64, attn_chunk=16,
+    )

@@ -1,0 +1,23 @@
+"""zamba2-7b [hybrid]: 81 Mamba2 layers + shared attention block every 6.
+
+d=3584, ssm_state=64; shared block 32H/kv32, d_ff=14336. [arXiv:2411.15242]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2_7b", family="hybrid",
+        num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+        d_ff=14336, vocab_size=32000,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, attn_every=6,
+        max_seq_len=524288,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=256, ssm_state=16, ssm_head_dim=16, attn_every=2,
+        max_seq_len=128, attn_chunk=16,
+    )

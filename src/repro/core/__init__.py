@@ -1,0 +1,65 @@
+"""Core of the Flex-TPU reproduction: dataflows, cycle model, CMU, Table II model."""
+
+from .area_power import PAPER_TABLE2, Overheads, SynthesisResult, overheads, synthesize
+from .cmu import DataflowPlan, LayerPlan, plan_kernels, plan_kernels_tuned, plan_systolic, static_vs_flex_traffic
+from .dataflow import (
+    ALL_DATAFLOWS,
+    ConvLayer,
+    Dataflow,
+    GemmShape,
+    KernelCost,
+    arithmetic_intensity,
+    best_dataflow,
+    best_kernel_dataflow,
+    hbm_traffic_bytes,
+    mxu_utilization,
+    systolic_cycles,
+    tune_kernel_dataflow,
+)
+from .dist_dataflow import best_mesh_dataflow, mesh_gemm_cost, plan_mesh
+from .systolic import (
+    LayerResult,
+    NetworkResult,
+    layer_cycle_table,
+    simulate_exact_os,
+    simulate_network,
+    utilization,
+)
+from .workloads import PAPER_TABLE1, WORKLOADS
+
+__all__ = [
+    "ALL_DATAFLOWS",
+    "ConvLayer",
+    "Dataflow",
+    "DataflowPlan",
+    "GemmShape",
+    "KernelCost",
+    "LayerPlan",
+    "LayerResult",
+    "NetworkResult",
+    "Overheads",
+    "PAPER_TABLE1",
+    "PAPER_TABLE2",
+    "SynthesisResult",
+    "WORKLOADS",
+    "arithmetic_intensity",
+    "best_dataflow",
+    "best_kernel_dataflow",
+    "best_mesh_dataflow",
+    "hbm_traffic_bytes",
+    "layer_cycle_table",
+    "mesh_gemm_cost",
+    "mxu_utilization",
+    "overheads",
+    "plan_kernels",
+    "plan_kernels_tuned",
+    "plan_mesh",
+    "plan_systolic",
+    "simulate_exact_os",
+    "simulate_network",
+    "static_vs_flex_traffic",
+    "synthesize",
+    "systolic_cycles",
+    "tune_kernel_dataflow",
+    "utilization",
+]

@@ -1,0 +1,137 @@
+"""Component-level 45nm area/power/delay model — reproduces paper Table II.
+
+The paper synthesises conventional (OS) and Flex TPUs with Synopsys DC on the
+Nangate 45nm open cell library at S = 8/16/32.  Synopsys is not available
+here, so we model the design bottom-up from component footprints (INT8
+multiplier, 24-bit accumulator, DFFs, 2:1 MUXes) calibrated against the
+paper's three synthesis points, with power-law periphery scaling (FIFOs,
+SRAM ports, controller).  The *model form* mirrors the paper's architecture:
+
+  area(S)  = S^2 * A_pe          + A_periph(S)
+  flex(S)  = S^2 * (A_pe + A_fx) + A_periph(S) + A_regfile(S) + A_cmu
+
+Calibration targets (paper Table II) are kept in PAPER_TABLE2 so the
+benchmark prints model-vs-paper side by side and tests bound the error.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# --- Component footprints (um^2, 45nm Nangate-class; calibrated) -----------
+MULT8_AREA = 565.0          # INT8 array multiplier
+ADDER24_AREA = 130.0        # 24-bit accumulator adder
+DFF_AREA = 5.6              # per flip-flop bit
+MUX2_AREA_PER_BIT = 2.2     # 2:1 mux per bit
+PE_REG_BITS = 40            # in(8) + w(8) + psum(24) registers per PE
+FLEX_REG_BITS = 8           # the paper's "+1 register"
+FLEX_MUX_BITS = 16          # the paper's "+2 MUXes" (8-bit each)
+FLEX_WIRING = 28.0          # routing/control overhead per PE
+
+A_PE = MULT8_AREA + ADDER24_AREA + PE_REG_BITS * DFF_AREA            # ~919 um^2
+A_FLEX_PE = FLEX_REG_BITS * DFF_AREA + FLEX_MUX_BITS * MUX2_AREA_PER_BIT + FLEX_WIRING
+
+# Periphery (weight/input/output memories, FIFOs, main controller):
+# power-law fit through the paper's three synthesis points.
+PERIPH_AREA_COEF = 115.7
+PERIPH_AREA_EXP = 2.23
+
+# Flex-only periphery: Weight/IFMap register file (scales with S) + CMU +
+# dataflow generator (fixed).
+REGFILE_AREA_PER_ROW = 400.0
+CMU_AREA = 280.0
+
+# --- Power (uW) -------------------------------------------------------------
+# Per-PE dynamic power grows with array size (clock-tree depth / wire load).
+PE_POWER_BASE = -4.5
+PE_POWER_LOG = 10.5          # P_pe(S) = BASE + LOG * log2(S)
+FLEX_PE_POWER_BASE = 2.9
+FLEX_PE_POWER_SLOPE = 0.09   # P_fx(S) = 2.9 + 0.09 * S
+PERIPH_POWER_COEF = 269.0
+PERIPH_POWER_EXP = 0.9
+
+# --- Critical path (ns) -----------------------------------------------------
+DELAY_BASE = 4.555
+DELAY_LOG = 0.415            # d(S) = 4.555 + 0.415 * log2(S)
+FLEX_MUX_DELAY = 0.07        # one 2:1 mux on the operand path
+
+
+@dataclass(frozen=True)
+class SynthesisResult:
+    array: int
+    flex: bool
+    area_mm2: float
+    power_mw: float
+    delay_ns: float
+
+    @property
+    def systolic_area_fraction(self) -> float:
+        import math
+
+        pe = self.array**2 * (A_PE + (A_FLEX_PE if self.flex else 0.0)) * 1e-6
+        return pe / self.area_mm2
+
+
+def _log2(x: float) -> float:
+    import math
+
+    return math.log2(x)
+
+
+def synthesize(array: int, flex: bool = False) -> SynthesisResult:
+    """Analytical 'synthesis' of a TPU / Flex-TPU at a given array size."""
+    s2 = array * array
+    area_um2 = s2 * A_PE + PERIPH_AREA_COEF * array**PERIPH_AREA_EXP
+    p_pe = PE_POWER_BASE + PE_POWER_LOG * _log2(array)
+    power_uw = s2 * p_pe + PERIPH_POWER_COEF * array**PERIPH_POWER_EXP
+    delay = DELAY_BASE + DELAY_LOG * _log2(array)
+    if flex:
+        area_um2 += s2 * A_FLEX_PE + REGFILE_AREA_PER_ROW * array + CMU_AREA
+        power_uw += s2 * (FLEX_PE_POWER_BASE + FLEX_PE_POWER_SLOPE * array)
+        delay += FLEX_MUX_DELAY
+    return SynthesisResult(
+        array=array,
+        flex=flex,
+        area_mm2=area_um2 * 1e-6,
+        power_mw=power_uw * 1e-3,
+        delay_ns=delay,
+    )
+
+
+@dataclass(frozen=True)
+class Overheads:
+    array: int
+    area_pct: float
+    power_pct: float
+    delay_pct: float
+
+
+def overheads(array: int) -> Overheads:
+    base, fx = synthesize(array, flex=False), synthesize(array, flex=True)
+    pct = lambda a, b: 100.0 * (b - a) / a
+    return Overheads(
+        array=array,
+        area_pct=pct(base.area_mm2, fx.area_mm2),
+        power_pct=pct(base.power_mw, fx.power_mw),
+        delay_pct=pct(base.delay_ns, fx.delay_ns),
+    )
+
+
+# Paper Table II reference values for validation.
+PAPER_TABLE2 = {
+    8: {
+        "tpu": {"area": 0.070, "power": 3.491, "delay": 5.80},
+        "flex": {"area": 0.080, "power": 3.756, "delay": 5.92},
+        "overhead": {"area": 13.607, "power": 7.591, "delay": 2.07},
+    },
+    16: {
+        "tpu": {"area": 0.284, "power": 13.850, "delay": 6.44},
+        "flex": {"area": 0.318, "power": 15.241, "delay": 6.48},
+        "overhead": {"area": 12.180, "power": 10.045, "delay": 0.62},
+    },
+    32: {
+        "tpu": {"area": 1.192, "power": 55.621, "delay": 6.63},
+        "flex": {"area": 1.311, "power": 61.545, "delay": 6.69},
+        "overhead": {"area": 10.052, "power": 10.650, "delay": 0.90},
+    },
+}

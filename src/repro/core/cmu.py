@@ -1,0 +1,155 @@
+"""Configuration Management Unit (CMU) — offline per-layer dataflow selection.
+
+Paper Section II: "To find the optimal dataflow strategy for each layer in the
+DNN, we should run each trained model on the Flex-TPU three times, once for
+each dataflow, during the development phase. [...] the optimal dataflow is
+then programmed into the CMU".
+
+We implement that exact pre-deployment procedure at both levels the framework
+supports:
+
+* ``plan_systolic``  — the faithful reproduction: 3 simulator runs per layer,
+  keep the per-layer argmin (drives Table I / Fig. 6 / Fig. 7 benchmarks).
+* ``plan_kernels``   — the TPU-native port: 3 HBM-traffic evaluations per GEMM
+  in an LM architecture, keep the per-layer roofline-argmin; the resulting
+  ``DataflowPlan`` is attached to the model config and dispatched *statically*
+  at trace time (the JAX analogue of programming the CMU's MUX signals).
+
+Both are one-time, offline, shape-only decisions — exactly the paper's
+deployment model, which is why no runtime switching machinery (lax.switch)
+is needed on the hot path.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from .dataflow import (
+    ALL_DATAFLOWS,
+    ConvLayer,
+    Dataflow,
+    GemmShape,
+    best_kernel_dataflow,
+    hbm_traffic_bytes,
+    systolic_cycles,
+    tune_kernel_dataflow,
+)
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    name: str
+    gemm: GemmShape
+    dataflow: Dataflow
+    est_cost: float  # cycles (systolic) or seconds (kernel roofline)
+
+
+@dataclass
+class DataflowPlan:
+    """The CMU's program: one dataflow per layer, decided pre-deployment."""
+
+    layers: list[LayerPlan] = field(default_factory=list)
+
+    def dataflow_for(self, name: str) -> Dataflow:
+        for l in self.layers:
+            if l.name == name:
+                return l.dataflow
+        raise KeyError(name)
+
+    def histogram(self) -> dict[str, int]:
+        h = {df.name: 0 for df in ALL_DATAFLOWS}
+        for l in self.layers:
+            h[l.dataflow.name] += 1
+        return h
+
+    def to_json(self) -> str:
+        return json.dumps(
+            [
+                {
+                    "name": l.name,
+                    "M": l.gemm.M,
+                    "K": l.gemm.K,
+                    "N": l.gemm.N,
+                    "dataflow": l.dataflow.name,
+                    "est_cost": l.est_cost,
+                }
+                for l in self.layers
+            ],
+            indent=2,
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "DataflowPlan":
+        plan = cls()
+        for row in json.loads(s):
+            gemm = GemmShape(M=row["M"], K=row["K"], N=row["N"], name=row["name"])
+            plan.layers.append(
+                LayerPlan(
+                    name=row["name"],
+                    gemm=gemm,
+                    dataflow=Dataflow[row["dataflow"]],
+                    est_cost=row["est_cost"],
+                )
+            )
+        return plan
+
+
+def plan_systolic(layers: list[ConvLayer | GemmShape], array: int) -> DataflowPlan:
+    """The paper's offline search on the cycle model (3 runs per layer)."""
+    plan = DataflowPlan()
+    for layer in layers:
+        gemm = layer.gemm() if isinstance(layer, ConvLayer) else layer
+        cycles = {df: systolic_cycles(gemm, df, array, array) for df in ALL_DATAFLOWS}
+        best = min(cycles, key=cycles.get)  # type: ignore[arg-type]
+        plan.layers.append(
+            LayerPlan(name=gemm.name, gemm=gemm, dataflow=best, est_cost=cycles[best])
+        )
+    return plan
+
+
+def plan_kernels(
+    gemms: list[GemmShape],
+    bm: int = 512,
+    bk: int = 512,
+    bn: int = 512,
+    vmem_limit: int = 128 * 1024 * 1024,
+) -> DataflowPlan:
+    """TPU-native CMU: pick per-GEMM dataflow by HBM-traffic roofline."""
+    plan = DataflowPlan()
+    for gemm in gemms:
+        df, cost = best_kernel_dataflow(gemm, bm=bm, bk=bk, bn=bn, vmem_limit=vmem_limit)
+        plan.layers.append(
+            LayerPlan(name=gemm.name, gemm=gemm, dataflow=df, est_cost=cost.time_s())
+        )
+    return plan
+
+
+def plan_kernels_tuned(
+    gemms: list[GemmShape], vmem_limit: int = 96 * 1024 * 1024
+) -> list[tuple[GemmShape, Dataflow, tuple[int, int, int], float]]:
+    """Full CMU: co-tuned (dataflow, block) per GEMM. Returns rich rows."""
+    rows = []
+    for g in gemms:
+        df, blk, cost = tune_kernel_dataflow(g, vmem_limit=vmem_limit)
+        rows.append((g, df, blk, cost.time_s()))
+    return rows
+
+
+def static_vs_flex_traffic(
+    gemms: list[GemmShape], bm: int = 512, bk: int = 512, bn: int = 512
+) -> dict[str, int]:
+    """Total HBM bytes for each static dataflow vs. the flex (per-layer) plan.
+
+    The kernel-level analogue of the paper's Table I: same exhaustive offline
+    search, cost = HBM traffic instead of cycles.
+    """
+    totals = {df.name: 0 for df in ALL_DATAFLOWS}
+    flex = 0
+    for g in gemms:
+        per = {df: hbm_traffic_bytes(g, df, bm, bk, bn).hbm_bytes for df in ALL_DATAFLOWS}
+        for df, v in per.items():
+            totals[df.name] += v
+        flex += min(per.values())
+    totals["FLEX"] = flex
+    return totals

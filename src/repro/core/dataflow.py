@@ -1,0 +1,286 @@
+"""Dataflow definitions and analytical cost models.
+
+The Flex-TPU paper's object of study is the *dataflow* of a systolic array:
+which operand is pinned ("stationary") in the PEs while the others stream.
+This module defines the three dataflows and two cost models over them:
+
+1. ``systolic_cycles`` — a ScaleSim-V2-style analytical clock-cycle model for an
+   R x C systolic array executing a GEMM under IS/OS/WS.  This is the model the
+   paper's own evaluation (Table I, Figs. 1/6/7) is built on; we re-derive the
+   fold/fill/drain arithmetic from the systolic pipeline first principles and
+   validate the resulting *per-layer optima and flex speedups* against the
+   paper's reported ranges (see tests/test_paper_claims.py).
+
+2. ``hbm_traffic_bytes`` — the TPU-native analogue used by the Pallas kernels:
+   for a blocked matmul on a real TPU the "dataflow" is the grid loop order,
+   and what differs between IS/OS/WS is how many times each operand's blocks
+   are fetched from HBM into VMEM.  The CMU uses this model to pick the
+   per-layer dataflow for the kernel path.
+
+Both models are pure functions of layer shape — deliberately so: the paper's
+core claim is that the optimum is a function of layer shape, decidable offline.
+"""
+
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass
+
+
+class Dataflow(enum.Enum):
+    """The three classic systolic dataflows (paper Section I)."""
+
+    IS = "input_stationary"
+    OS = "output_stationary"
+    WS = "weight_stationary"
+
+    @property
+    def short(self) -> str:
+        return self.name
+
+
+ALL_DATAFLOWS = (Dataflow.IS, Dataflow.OS, Dataflow.WS)
+
+
+@dataclass(frozen=True)
+class GemmShape:
+    """A GEMM ``C[M,N] = A[M,K] @ B[K,N]``.
+
+    For a conv layer lowered via im2col (ScaleSim's convention):
+      M = output pixels = H_out * W_out  (per image)
+      K = R * S * C_in   (filter volume)
+      N = C_out          (number of filters)
+    For an LM projection: M = tokens, K = d_in, N = d_out.
+    """
+
+    M: int
+    K: int
+    N: int
+    name: str = ""
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.M * self.K * self.N
+
+    @property
+    def macs(self) -> int:
+        return self.M * self.K * self.N
+
+
+@dataclass(frozen=True)
+class ConvLayer:
+    """A convolution layer in the paper's CNN workloads (ScaleSim topology row)."""
+
+    name: str
+    ifmap_h: int
+    ifmap_w: int
+    filt_h: int
+    filt_w: int
+    channels: int
+    num_filters: int
+    stride: int
+
+    def out_hw(self) -> tuple[int, int]:
+        oh = (self.ifmap_h - self.filt_h) // self.stride + 1
+        ow = (self.ifmap_w - self.filt_w) // self.stride + 1
+        return max(oh, 1), max(ow, 1)
+
+    def gemm(self) -> GemmShape:
+        oh, ow = self.out_hw()
+        return GemmShape(
+            M=oh * ow,
+            K=self.filt_h * self.filt_w * self.channels,
+            N=self.num_filters,
+            name=self.name,
+        )
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def systolic_cycles(shape: GemmShape, dataflow: Dataflow, rows: int, cols: int) -> int:
+    """Analytical cycles for one GEMM on an ``rows x cols`` systolic array.
+
+    Fold/fill/drain model (ScaleSim-V2 "analytical" formulation):
+
+    Each dataflow pins one operand tile of at most ``rows x cols`` elements in
+    the array ("the fold") and streams a third dimension through it.  A fold
+    costs: (preload of the stationary tile, where applicable) + (stream length)
+    + (array skew fill/drain ``rows + cols - 2``) + (output drain, where the
+    outputs are resident and must be shifted out).
+
+      OS: stationary C tile (rows x cols over M x N); stream K.
+          folds = ceil(M/rows) * ceil(N/cols)
+          cycles/fold = K + (rows + cols - 2)   [skewed operand fill]
+                        + rows                  [shift resident outputs out]
+      WS: stationary B tile (rows x cols over K x N); stream M.
+          folds = ceil(K/rows) * ceil(N/cols)
+          cycles/fold = rows                    [preload weights, row/cycle]
+                        + M + (rows + cols - 2) [stream + skew/drain]
+      IS: stationary A tile (rows x cols over M x K); stream N.
+          folds = ceil(M/rows) * ceil(K/cols)
+          cycles/fold = rows                    [preload inputs]
+                        + N + (rows + cols - 2)
+
+    Folds are executed back-to-back without overlap (ScaleSim's conservative
+    assumption).  The qualitative structure — WS wins when M >> K·N/S², OS wins
+    for K-heavy deep layers, IS wins for N-light layers — is exactly the
+    paper's Fig. 1 behaviour.
+    """
+    M, K, N = shape.M, shape.K, shape.N
+    skew = rows + cols - 2
+    if dataflow is Dataflow.OS:
+        folds = _ceil_div(M, rows) * _ceil_div(N, cols)
+        per_fold = K + skew + rows
+    elif dataflow is Dataflow.WS:
+        folds = _ceil_div(K, rows) * _ceil_div(N, cols)
+        per_fold = rows + M + skew
+    elif dataflow is Dataflow.IS:
+        folds = _ceil_div(M, rows) * _ceil_div(K, cols)
+        per_fold = rows + N + skew
+    else:  # pragma: no cover - exhaustive enum
+        raise ValueError(dataflow)
+    return folds * per_fold
+
+
+def best_dataflow(shape: GemmShape, rows: int, cols: int) -> tuple[Dataflow, int]:
+    """Exhaustive 3-way search the paper performs offline per layer."""
+    best = min(ALL_DATAFLOWS, key=lambda d: systolic_cycles(shape, d, rows, cols))
+    return best, systolic_cycles(shape, best, rows, cols)
+
+
+# ---------------------------------------------------------------------------
+# TPU-native (kernel-level) cost model: HBM <-> VMEM block traffic.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelCost:
+    """Estimated cost of one blocked matmul under a given dataflow."""
+
+    hbm_bytes: int
+    mxu_flops: int
+    vmem_bytes: int  # resident working set, must be <= VMEM capacity
+
+    def time_s(self, peak_flops: float = 197e12, hbm_bw: float = 819e9) -> float:
+        """Roofline time: max of compute and memory terms."""
+        return max(self.mxu_flops / peak_flops, self.hbm_bytes / hbm_bw)
+
+
+def hbm_traffic_bytes(
+    shape: GemmShape,
+    dataflow: Dataflow,
+    bm: int,
+    bk: int,
+    bn: int,
+    in_bytes: int = 2,
+    out_bytes: int = 4,
+) -> KernelCost:
+    """HBM traffic for a blocked matmul with block sizes (bm, bk, bn).
+
+    The Pallas grid order decides block residency (DESIGN.md §2.1):
+
+      OS  grid (i, j, k): C block stays in VMEM across the k loop.
+          A fetched Mb*Nb*Kb times? No: A[i,k] changes with (i,k) and is
+          re-fetched for each j; B[k,j] re-fetched for each i.
+          bytes = Nb * (M*K) * in  +  Mb * (K*N) * in  +  (M*N) * out
+      WS  grid (j, k, i): B block pinned across the i loop.
+          bytes = (K*N) * in  +  Nb * (M*K) * in  +  Kb * (M*N) * (rw partials)
+      IS  grid (i, k, j): A block pinned across the j loop.
+          bytes = (M*K) * in  +  Mb * (K*N) * in  +  Kb * (M*N) * (rw partials)
+
+    where Mb=ceil(M/bm) etc.  WS/IS pay partial-sum read+write traffic when
+    K doesn't fit one block (Kb > 1); OS never writes partials — this is the
+    VMEM-level image of the paper's "outputs accumulate in place" argument.
+    """
+    M, K, N = shape.M, shape.K, shape.N
+    Mb, Kb, Nb = _ceil_div(M, bm), _ceil_div(K, bk), _ceil_div(N, bn)
+    a, b, c = M * K * in_bytes, K * N * in_bytes, M * N * out_bytes
+    if dataflow is Dataflow.OS:
+        hbm = Nb * a + Mb * b + c
+        vmem = (bm * bk + bk * bn) * in_bytes + bm * bn * 4  # f32 accumulator
+    elif dataflow is Dataflow.WS:
+        partial_rw = (2 * Kb - 1) * c if Kb > 1 else c
+        hbm = b + Nb * a + partial_rw
+        vmem = bk * bn * in_bytes + bm * bk * in_bytes + bm * bn * 4
+    elif dataflow is Dataflow.IS:
+        partial_rw = (2 * Kb - 1) * c if Kb > 1 else c
+        hbm = a + Mb * b + partial_rw
+        vmem = bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * 4
+    else:  # pragma: no cover
+        raise ValueError(dataflow)
+    return KernelCost(hbm_bytes=hbm, mxu_flops=shape.flops, vmem_bytes=vmem)
+
+
+def best_kernel_dataflow(
+    shape: GemmShape,
+    bm: int = 512,
+    bk: int = 512,
+    bn: int = 512,
+    vmem_limit: int = 128 * 1024 * 1024,
+) -> tuple[Dataflow, KernelCost]:
+    """Pick the dataflow minimising roofline time subject to VMEM fit."""
+    candidates: list[tuple[float, Dataflow, KernelCost]] = []
+    for df in ALL_DATAFLOWS:
+        cost = hbm_traffic_bytes(shape, df, bm, bk, bn)
+        if cost.vmem_bytes <= vmem_limit:
+            candidates.append((cost.time_s(), df, cost))
+    if not candidates:
+        raise ValueError(f"no dataflow fits VMEM for {shape}")
+    _, df, cost = min(candidates, key=lambda t: t[0])
+    return df, cost
+
+
+def tune_kernel_dataflow(
+    shape: GemmShape,
+    vmem_limit: int = 96 * 1024 * 1024,
+    candidates: tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096, 8192),
+) -> tuple[Dataflow, tuple[int, int, int], KernelCost]:
+    """Co-tune (dataflow, block shape) under a VMEM budget.
+
+    This is the full CMU: the paper tunes which operand is pinned; on TPU the
+    block shape decides *how much* of it is pinned, so the two must be chosen
+    together.  E.g. with bk >= K the WS/IS partial-sum traffic vanishes and
+    WS wins tall training GEMMs while IS wins decode (inputs pinned, weights
+    streamed once) — matching the paper's per-layer narrative.
+    """
+
+    def blocks_for(d: int) -> list[int]:
+        rounded = max(_ceil_div(d, 128) * 128, 128)
+        cs = [c for c in candidates if c <= rounded]
+        if rounded <= 16384 and rounded not in cs:
+            cs.append(rounded)  # exact-fit block (e.g. bk = K kills partials)
+        return cs or [128]
+
+    best: tuple[float, Dataflow, tuple[int, int, int], KernelCost] | None = None
+    for df in ALL_DATAFLOWS:
+        for bm in blocks_for(shape.M):
+            for bk in blocks_for(shape.K):
+                for bn in blocks_for(shape.N):
+                    cost = hbm_traffic_bytes(shape, df, bm, bk, bn)
+                    if cost.vmem_bytes > vmem_limit:
+                        continue
+                    t = cost.time_s()
+                    if best is None or t < best[0] - 1e-18 or (
+                        abs(t - best[0]) < 1e-18 and cost.hbm_bytes < best[3].hbm_bytes
+                    ):
+                        best = (t, df, (bm, bk, bn), cost)
+    assert best is not None
+    return best[1], best[2], best[3]
+
+
+def arithmetic_intensity(shape: GemmShape, in_bytes: int = 2, out_bytes: int = 2) -> float:
+    """FLOPs per HBM byte at perfect reuse (the roofline upper bound)."""
+    bytes_min = (shape.M * shape.K + shape.K * shape.N) * in_bytes + shape.M * shape.N * out_bytes
+    return shape.flops / bytes_min
+
+
+def mxu_utilization(shape: GemmShape, mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy given dimension padding to the MXU size."""
+
+    def pad(d: int) -> int:
+        return _ceil_div(d, mxu) * mxu
+
+    return (shape.M * shape.K * shape.N) / (pad(shape.M) * pad(shape.K) * pad(shape.N))

@@ -1,0 +1,83 @@
+"""Mesh-level dataflow selection — the Flex-TPU insight promoted to the pod.
+
+For a GEMM sharded over a `model`-axis of size T, there are three classic
+SPMD strategies, and they are exactly the paper's three stationarities one
+more level up the hierarchy (chip <-> PE, ICI <-> systolic wiring):
+
+  WS (weight-stationary / tensor parallel):
+      weights stay sharded on their chips; activations are all-gathered in
+      and partial outputs reduce-scattered out.
+      comm_bytes = allgather(A) + reducescatter(C)  ~  M*K + M*N   (per chip x (T-1)/T)
+  IS (input-stationary / weight-gathered, ZeRO-3 style):
+      activations stay put (sharded over tokens); weight shards are
+      all-gathered to every chip.
+      comm_bytes = allgather(B)                      ~  K*N
+  OS (output-stationary):
+      both A and B arrive as shards that already match the local output
+      block (2D-sharded "SUMMA" step); partials accumulate locally,
+      collective-permute rotates the shards.
+      comm_bytes = rotate(A) + rotate(B)             ~  M*K + K*N  (pipelined)
+
+The optimum depends on layer shape exactly as in the paper: training steps
+(M = tokens >> K,N/T) prefer IS (gather the small weights), decode steps
+(M ~ batch) prefer WS (move the tiny activations), and square-ish cases with
+huge both prefer OS rotation.  ``plan_mesh`` is the CMU at mesh level: a
+pure shape-driven offline decision, emitted into the model's sharding config.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .dataflow import ALL_DATAFLOWS, Dataflow, GemmShape
+
+
+@dataclass(frozen=True)
+class MeshGemmCost:
+    dataflow: Dataflow
+    comm_bytes: int      # ICI bytes per chip for this layer
+    flops_per_chip: int
+
+    def time_s(
+        self, peak_flops: float = 197e12, ici_bw: float = 50e9, overlap: float = 0.0
+    ) -> float:
+        """Step time with `overlap` in [0,1] fraction of comm hidden under compute."""
+        t_c = self.flops_per_chip / peak_flops
+        t_m = self.comm_bytes / ici_bw
+        return max(t_c, t_m) if overlap >= 1.0 else t_c + (1 - overlap) * t_m
+
+
+def mesh_gemm_cost(
+    shape: GemmShape, dataflow: Dataflow, tp: int, bytes_per_el: int = 2
+) -> MeshGemmCost:
+    """ICI bytes/chip + FLOPs/chip for C[M,N] = A[M,K] @ B[K,N] over tp chips."""
+    M, K, N = shape.M, shape.K, shape.N
+    ring = (tp - 1) / tp  # ring all-gather / reduce-scatter factor
+    if dataflow is Dataflow.WS:
+        comm = (M * K + M * N) * bytes_per_el * ring
+    elif dataflow is Dataflow.IS:
+        comm = (K * N) * bytes_per_el * ring
+    elif dataflow is Dataflow.OS:
+        comm = (M * K / tp + K * N / tp) * bytes_per_el * (tp - 1)
+    else:  # pragma: no cover
+        raise ValueError(dataflow)
+    return MeshGemmCost(
+        dataflow=dataflow,
+        comm_bytes=int(comm),
+        flops_per_chip=shape.flops // tp,
+    )
+
+
+def best_mesh_dataflow(
+    shape: GemmShape, tp: int, overlap: float = 0.0
+) -> tuple[Dataflow, MeshGemmCost]:
+    costs = {df: mesh_gemm_cost(shape, df, tp) for df in ALL_DATAFLOWS}
+    best = min(costs, key=lambda d: costs[d].time_s(overlap=overlap))
+    return best, costs[best]
+
+
+def plan_mesh(
+    gemms: list[GemmShape], tp: int, overlap: float = 0.0
+) -> dict[str, Dataflow]:
+    """Mesh-level CMU: per-layer stationary-operand choice for a TP degree."""
+    return {g.name: best_mesh_dataflow(g, tp, overlap)[0] for g in gemms}

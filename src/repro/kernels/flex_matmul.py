@@ -1,0 +1,192 @@
+"""Pallas TPU matmul kernels with reconfigurable dataflow (IS / OS / WS).
+
+This is the TPU-native port of the Flex-TPU processing element (paper Fig. 3/4):
+on a real TPU the programmable "stationarity" lives one level up the memory
+hierarchy — which operand's VMEM block stays resident across consecutive grid
+steps, determined by the grid loop order and each ``BlockSpec.index_map``:
+
+  OS  grid (i, j, k):  the f32 accumulator block C[i,j] is pinned in VMEM
+      scratch across the whole k loop and written to HBM exactly once.
+  WS  grid (k, j, i):  the weight block B[k,j] is pinned across the entire
+      M stream (its index_map ignores the innermost grid axis); partial sums
+      stream through HBM (aliased read-modify-write) — the price WS pays when
+      K exceeds one block, exactly as in `core.dataflow.hbm_traffic_bytes`.
+  IS  grid (k, i, j):  symmetric — the activation block A[i,k] is pinned,
+      weights stream, partials stream.
+
+All three compute bit-identical results (f32 accumulation); they differ only
+in HBM traffic and residency, which is the paper's point.  The CMU
+(`core.cmu.plan_kernels`) picks per layer offline; dispatch is static at
+trace time (the JAX analogue of programming the CMU mux signals).
+
+Kernels are written for TPU (MXU-aligned blocks, VMEM scratch) and validated
+on CPU with ``interpret=True`` against ``ref.matmul_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dataflow import Dataflow
+
+DEFAULT_BLOCK = (256, 256, 256)  # (bm, bk, bn) — MXU-aligned, ~768KB working set
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref):
+    """Output-stationary: accumulate in VMEM scratch across the k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _stream_accum_kernel(a_ref, b_ref, o_ref):
+    """WS/IS shared body: one MAC into the HBM-streamed partial-sum block.
+
+    The output block is revisited non-consecutively across the outer k axis,
+    so partial sums stream through HBM (read-modify-write) — the structural
+    price WS/IS pay when K exceeds one block, matching
+    ``core.dataflow.hbm_traffic_bytes``.  The stationarity difference between
+    WS and IS is entirely in the grid order and index_maps of the surrounding
+    pallas_call (whose pinned operand ignores the innermost axis), not in the
+    MAC itself — mirroring the paper's PE, where the same MAC hardware serves
+    all three dataflows and only the mux selection changes.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders (one per dataflow)
+# ---------------------------------------------------------------------------
+
+
+def _check(M: int, K: int, N: int, bm: int, bk: int, bn: int) -> None:
+    if M % bm or K % bk or N % bn:
+        raise ValueError(
+            f"matmul dims ({M},{K},{N}) must divide blocks ({bm},{bk},{bn}); "
+            "use ops.flex_matmul which pads"
+        )
+
+
+def matmul_os(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bk, bn = block
+    _check(M, K, N, bm, bk, bn)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _os_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def _matmul_stream(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    stationary: str,
+    block: tuple[int, int, int],
+    interpret: bool,
+) -> jax.Array:
+    """Shared WS/IS driver: aliased partial-sum accumulation over outer k."""
+    M, K = a.shape
+    _, N = b.shape
+    bm, bk, bn = block
+    _check(M, K, N, bm, bk, bn)
+    if stationary == "weight":
+        # WS: grid (k, j, i) — B[k,j] constant across innermost i (pinned).
+        grid = (K // bk, N // bn, M // bm)
+        a_spec = pl.BlockSpec((bm, bk), lambda k, j, i: (i, k))
+        b_spec = pl.BlockSpec((bk, bn), lambda k, j, i: (k, j))
+        c_spec = pl.BlockSpec((bm, bn), lambda k, j, i: (i, j))
+    elif stationary == "input":
+        # IS: grid (k, i, j) — A[i,k] constant across innermost j (pinned).
+        grid = (K // bk, M // bm, N // bn)
+        a_spec = pl.BlockSpec((bm, bk), lambda k, i, j: (i, k))
+        b_spec = pl.BlockSpec((bk, bn), lambda k, i, j: (k, j))
+        c_spec = pl.BlockSpec((bm, bn), lambda k, i, j: (i, j))
+    else:  # pragma: no cover
+        raise ValueError(stationary)
+    return pl.pallas_call(
+        _stream_accum_kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def matmul_ws(a, b, *, block=DEFAULT_BLOCK, interpret=False):
+    return _matmul_stream(a, b, stationary="weight", block=block, interpret=interpret)
+
+
+def matmul_is(a, b, *, block=DEFAULT_BLOCK, interpret=False):
+    return _matmul_stream(a, b, stationary="input", block=block, interpret=interpret)
+
+
+KERNELS = {
+    Dataflow.OS: matmul_os,
+    Dataflow.WS: matmul_ws,
+    Dataflow.IS: matmul_is,
+}
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    dataflow: Dataflow = Dataflow.OS,
+    *,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flex matmul: same math, dataflow-selected block schedule."""
+    return KERNELS[dataflow](a, b, block=block, interpret=interpret)

@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the flex dataflow kernels.
+
+``flex_matmul`` is the op the model stack calls: it pads to block multiples,
+dispatches to the CMU-selected dataflow kernel, and falls back to plain XLA
+``jnp.dot`` when the kernel path is disabled (CPU dry-runs / compile-only
+meshes, where XLA must see a fusible dot for cost_analysis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import Dataflow, GemmShape, best_kernel_dataflow
+
+from . import flex_matmul as fk
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype")
+)
+def flex_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    dataflow: Dataflow = Dataflow.OS,
+    block: tuple[int, int, int] = fk.DEFAULT_BLOCK,
+    interpret: bool = False,
+    out_dtype: jnp.dtype | None = None,
+) -> jax.Array:
+    """C = A @ B under the given dataflow; pads/unpads to block multiples."""
+    M, K = a.shape
+    K2, N = b.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, _round_up(M)), min(bk, _round_up(K)), min(bn, _round_up(N))
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret)
+    out = out[:M, :N]
+    return out.astype(out_dtype or jnp.promote_types(a.dtype, b.dtype))
+
+
+def _round_up(d: int, mult: int = 128) -> int:
+    """Smallest MXU-aligned block covering d (min 8 sublanes for tiny dims)."""
+    if d >= mult:
+        return mult
+    r = 8
+    while r < d:
+        r *= 2
+    return r
+
+
+def auto_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    name: str = "",
+    interpret: bool = False,
+) -> jax.Array:
+    """CMU-in-the-loop matmul: picks the dataflow from shapes at trace time.
+
+    Shape-driven and trace-time static — the deployment model of the paper
+    (offline selection, zero runtime switching cost).
+    """
+    shape = GemmShape(M=a.shape[0], K=a.shape[1], N=b.shape[1], name=name)
+    df, _ = best_kernel_dataflow(shape)
+    return flex_matmul(a, b, dataflow=df, interpret=interpret)

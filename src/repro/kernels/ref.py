@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """f32-accumulating matmul oracle (matches all three dataflow kernels)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def blocked_matmul_ref(
+    a: jax.Array, b: jax.Array, bm: int, bk: int, bn: int
+) -> jax.Array:
+    """Block-by-block oracle: proves blocking itself doesn't change the math."""
+    M, K = a.shape
+    _, N = b.shape
+    out = jnp.zeros((M, N), jnp.float32)
+    for i in range(0, M, bm):
+        for j in range(0, N, bn):
+            acc = jnp.zeros((min(bm, M - i), min(bn, N - j)), jnp.float32)
+            for k in range(0, K, bk):
+                acc += jnp.dot(
+                    a[i : i + bm, k : k + bk],
+                    b[k : k + bk, j : j + bn],
+                    preferred_element_type=jnp.float32,
+                )
+            out = out.at[i : i + bm, j : j + bn].set(acc)
+    return out
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """Plain softmax attention oracle. q (B,S,H,hd); k/v (B,Skv,Hkv,hd) GQA."""
+    import math
+
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, Hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(j <= i, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, with no device allocation (ShapeDtypeStruct inputs).
+
+For each cell this prints/records:
+  - compiled.memory_analysis()  (per-device bytes: proves the config fits)
+  - compiled.cost_analysis()    (HLO FLOPs / bytes; scan bodies counted once —
+                                 the roofline harness corrects via unrolled
+                                 depth probes, benchmarks/roofline.py)
+  - the collective schedule     (op type -> count, bytes) parsed from HLO
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import re
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_cells, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    batch_shardings,
+    batch_specs,
+    cache_shardings,
+    model_for_cell,
+    rules_for,
+)
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    microbatches_for,
+    use_quantized_opt,
+)
+from repro.models.sharding import param_shardings, use_rules
+from repro.optim import adamw_init
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt[:4].rstrip("_"), 4)
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Sum bytes moved per collective type from compiled (SPMD) HLO."""
+    stats: dict[str, dict[str, float]] = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", rhs)
+        if not opm or "-done" in rhs:
+            continue
+        op = opm.group(1)
+        result_part = rhs[: opm.start()]
+        operand_part = rhs[opm.end():]
+        b = max(_shape_bytes(result_part), _shape_bytes(operand_part))
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += b
+    return stats
+
+
+def opt_shardings(opt_sds, p_shardings, mesh):
+    """fp32 moments follow param shardings; int8 blocks flat-shard dim 0."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.optim.adamw import AdamWState
+
+    flat_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    # int8 moments keep the param's shape -> same sharding; per-channel
+    # scales (last dim 1) keep the leading spec with the last entry dropped.
+    def scale_sh(p_sh):
+        spec = list(p_sh.spec)
+        if spec:
+            spec[-1] = None
+        return NamedSharding(mesh, P(*spec))
+
+    m_sh, v_sh = jax.tree.map(lambda p: p, p_shardings), jax.tree.map(lambda p: p, p_shardings)
+    sc_sh = None
+    if opt_sds.scales is not None:
+        sc_sh = (jax.tree.map(scale_sh, p_shardings), None)
+    return AdamWState(step=NamedSharding(mesh, P()), m=m_sh, v=v_sh, scales=sc_sh)
+
+
+def lower_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    rules: dict | None = None,
+    overrides: dict | None = None,
+    compile_only_lower: bool = False,
+    unroll: bool = False,
+    microbatches: int | None = None,
+):
+    """Lower + compile one cell. Returns the result record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model, cell = model_for_cell(arch, shape, unroll=unroll, overrides=overrides)
+    cfg = model.cfg
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": cell.step,
+    }
+    t0 = time.time()
+    if rules is None:
+        rules = rules_for(arch, shape)
+    with use_rules(mesh, rules):
+        p_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_sh = param_shardings(p_sds)
+        b_sds = batch_specs(cfg, cell)
+        b_sh = batch_shardings(mesh, b_sds)
+
+        if cell.step == "train":
+            o_sds = jax.eval_shape(
+                lambda p: adamw_init(p, quantize=use_quantized_opt(arch)), p_sds
+            )
+            o_sh = opt_shardings(o_sds, p_sh, mesh)
+            mb = microbatches if microbatches is not None else microbatches_for(arch)
+            step = make_train_step(model, microbatches=mb)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(p_sds, o_sds, b_sds)
+        elif cell.step == "prefill":
+            step = make_prefill_step(model, cache_len=cell.seq_len)
+            c_sds = jax.eval_shape(step, p_sds, b_sds)[0]
+            c_sh = cache_shardings(mesh, c_sds)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=(c_sh, None))
+            lowered = jitted.lower(p_sds, b_sds)
+        else:  # decode
+            prefill = make_prefill_step(model, cache_len=cell.seq_len)
+            pre_b = batch_specs(cfg, SHAPES["prefill_32k"])
+            # cache structure from eval_shape at this cell's B x S
+            pre_b = {
+                k: jax.ShapeDtypeStruct((cell.global_batch,) + v.shape[1:], v.dtype)
+                for k, v in pre_b.items()
+                if k != "labels"
+            }
+            # prompt length irrelevant for cache struct; use a short prompt
+            prompt = min(128, cell.seq_len)
+            pre_b["tokens"] = jax.ShapeDtypeStruct((cell.global_batch, prompt), jnp.int32)
+            if cfg.family == "vlm":
+                pre_b["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (cell.global_batch, cfg.vision_tokens, cfg.vision_embed_dim or cfg.d_model),
+                    jnp.float32,
+                )
+            c_sds = jax.eval_shape(prefill, p_sds, pre_b)[0]
+            c_sh = cache_shardings(mesh, c_sds)
+            step = make_decode_step(model)
+            tok = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            tok_sh = batch_shardings(mesh, {"tokens": tok})["tokens"]
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, tok_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(p_sds, c_sds, tok)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[f"mem_{k}"] = int(v)
+        cost = compiled.cost_analysis()
+        if cost:
+            rec["hlo_flops"] = float(cost.get("flops", 0.0))
+            rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        if not applicable(arch, shape):
+            print(f"SKIP {arch} x {shape} (inapplicable)")
+            continue
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"CACHED {tag}")
+                continue
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                coll = {k: v for k, v in rec["collectives"].items() if v["count"]}
+                print(
+                    f"OK {tag}: lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                    f"flops {rec.get('hlo_flops', 0):.3g} "
+                    f"mem_temp {rec.get('mem_temp_size_in_bytes', -1):,} "
+                    f"collectives {list(coll)}"
+                )
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((tag, str(e)[:200]))
+                print(f"FAIL {tag}: {e}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for every
+model input — no device allocation, the shannon/kernels pattern.  Cache
+specs for decode cells are derived with ``jax.eval_shape`` over the prefill
+function, so they always match the model's real cache structure.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeCell
+from repro.launch.mesh import dp_axes, dp_size
+from repro.models.config import ModelConfig
+from repro.models.registry import get_config
+from repro.models.transformer import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, SDS]:
+    B, S = cell.global_batch, cell.seq_len
+    specs: dict[str, SDS] = {}
+    if cfg.family == "vlm" and cell.step != "decode":
+        text = S - cfg.vision_tokens
+        specs["tokens"] = SDS((B, text), jnp.int32)
+        specs["vision_embeds"] = SDS(
+            (B, cfg.vision_tokens, cfg.vision_embed_dim or cfg.d_model), jnp.float32
+        )
+        if cell.step == "train":
+            specs["labels"] = SDS((B, text), jnp.int32)
+        return specs
+    specs["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        specs["audio_embeds"] = SDS((B, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    if cell.step == "train":
+        specs["labels"] = SDS((B, S), jnp.int32)
+    return specs
+
+
+def batch_shardings(mesh, specs: dict[str, SDS]) -> dict[str, NamedSharding]:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        spec = [dp] + [None] * (len(v.shape) - 1)
+        if v.shape[0] % dp_size(mesh):
+            spec[0] = None
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache shardings (decode cells)
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES: list[tuple[str, tuple[Any, ...]]] = [
+    # (path regex, dims tags: 'B' batch, 'S' seq (model-fallback), 'H' heads)
+    (r"kv/(k|v)$", (None, "B", "S", "H", None)),
+    (r"cross_(k|v)$", (None, "B", "S", "H", None)),
+    (r"mamba/conv$", (None, "B", None, "H")),
+    (r"mamba/ssm$", (None, "B", "H", None, None)),
+    (r"states/wkv$", (None, "B", "H", None, None)),
+    (r"states/shift_(t|c)$", (None, "B", "H")),
+    (r"pos$", ()),
+]
+
+
+def cache_shardings(mesh, cache_sds: Any) -> Any:
+    """Path-rule shardings for a decode cache tree.
+
+    Batch shards over DP when divisible (else long_500k's B=1 falls back to
+    sharding the KV sequence over 'data').  The 'model' axis goes on the
+    kv-head dim when head count divides it, else on the sequence dim — GQA
+    archs with 1-8 kv heads can't split 16 ways, but their 32k-token caches
+    can (the attention then runs with a sharded-KV softmax).
+    """
+    dp = dp_axes(mesh)
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def leaf(path, x):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "name", ""))) for k in path)
+        for pat, dims in _CACHE_RULES:
+            if re.search(pat, pstr):
+                spec: list[Any] = [None] * len(dims)
+                b_ok = False
+                h_ok = False
+                for i, d in enumerate(dims):
+                    if d == "B" and x.shape[i] % dp_size(mesh) == 0:
+                        spec[i] = dp
+                        b_ok = True
+                    elif d == "H" and x.shape[i] % tp == 0:
+                        spec[i] = "model"
+                        h_ok = True
+                for i, d in enumerate(dims):
+                    if d != "S":
+                        continue
+                    axes = []
+                    if not h_ok:
+                        axes.append("model")  # model axis falls back to seq
+                    if not b_ok and "data" in mesh.axis_names:
+                        axes.append("data")   # B=1 long-context: seq takes data too
+                    import math as _m
+
+                    ext = _m.prod(mesh.shape[a] for a in axes) if axes else 1
+                    if axes and x.shape[i] % ext == 0:
+                        spec[i] = tuple(axes) if len(axes) > 1 else axes[0]
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_sds)
+
+
+def rules_for(arch: str, shape: str) -> dict | None:
+    """Per-(arch, shape) sharding-rule overrides — the mesh-level CMU output.
+
+    zamba2's training step is SSM-dominated (sequence-serial token mixing):
+    the §Perf hillclimb showed the IS mesh-dataflow (activations stationary,
+    batch over data x model, weights gathered ZeRO-3 style) cuts the
+    collective term 8.7x and memory 1.9x vs the default WS/SP rules
+    (EXPERIMENTS.md §Perf A1-A3). None -> DEFAULT_RULES.
+    """
+    from repro.models.sharding import DEFAULT_RULES
+
+    if arch == "zamba2_7b" and shape == "train_4k":
+        return dict(
+            DEFAULT_RULES,
+            act_batch=("data", "model"), act_seq=None, act_seq_np=None,
+            act_heads=None, act_expert=None, act_vocab=None,
+        )
+    return None
+
+
+def model_for_cell(arch: str, shape: str, *, remat: str = "full", unroll: bool = False,
+                   overrides: dict | None = None) -> tuple[Model, ShapeCell]:
+    cell = SHAPES[shape]
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return Model(cfg, remat=remat if cell.step == "train" else "none", unroll=unroll), cell
+
+
+def token_count(cfg: ModelConfig, cell: ShapeCell) -> int:
+    if cfg.family == "vlm" and cell.step != "decode":
+        return cell.global_batch * cell.seq_len  # vision prefix + text
+    return cell.global_batch * cell.seq_len

@@ -1,0 +1,122 @@
+"""Step-function builders (train / prefill / decode) shared by the dry-run,
+the real training driver, and the serving driver."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim import adamw_init, adamw_update
+from repro.optim.schedules import cosine, wsd
+
+
+def make_train_step(
+    model: Model,
+    *,
+    schedule: Callable | None = None,
+    peak_lr: float = 3e-4,
+    total_steps: int = 10_000,
+    warmup: int = 100,
+    weight_decay: float = 0.1,
+    microbatches: int = 1,
+    compute_dtype: str | None = "bfloat16",
+) -> Callable:
+    """Build the jittable train step.
+
+    ``microbatches > 1`` runs gradient accumulation over a lax.scan: the
+    global batch is split along dim 0, grads accumulate in f32 — this is what
+    fits the 100B+ MoE configs' activations in per-chip HBM (DESIGN.md §5).
+
+    ``compute_dtype='bfloat16'`` casts f32 master params once at step entry,
+    so FSDP weight all-gathers move bf16 (half the ICI bytes) while the
+    optimizer still updates f32 masters (§Perf C2).
+    """
+    sched = schedule or (
+        (lambda s: wsd(s, total_steps, peak_lr, warmup))
+        if model.cfg.name.startswith("minicpm")  # minicpm's WSD schedule
+        else (lambda s: cosine(s, total_steps, peak_lr, warmup))
+    )
+
+    from repro.models.sharding import constrain
+
+    cdt = jnp.dtype(compute_dtype) if compute_dtype else None
+
+    def loss_fn(params, batch):
+        if cdt is not None:
+            params = jax.tree.map(
+                lambda p: p.astype(cdt)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+                params,
+            )
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape(microbatches, a.shape[0] // microbatches, *a.shape[1:]),
+                batch,
+            )
+            mb = jax.tree.map(
+                lambda a: constrain(a, None, "act_batch", *([None] * (a.ndim - 2))), mb
+            )
+
+            def body(acc, one):
+                g_acc, l_acc = acc
+                one = jax.tree.map(
+                    lambda a: constrain(a, "act_batch", *([None] * (a.ndim - 1))), one
+                )
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, one)
+                g_acc = jax.tree.map(lambda A, G: A + G.astype(A.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(body, (zero_g, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss, metrics = l_sum / microbatches, {}
+        lr = sched(opt_state.step)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr, weight_decay=weight_decay
+        )
+        return params, opt_state, {"loss": loss, "lr": lr, **metrics}
+
+    return train_step
+
+
+def microbatches_for(arch_name: str, step: str = "train") -> int:
+    """Grad-accumulation depth per arch (memory fit on 16GB/chip v5e)."""
+    if step != "train":
+        return 1
+    return {"arctic_480b": 8, "qwen3_moe_235b": 4, "gemma3_12b": 2}.get(arch_name, 1)
+
+
+def make_prefill_step(model: Model, cache_len: int) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch, cache_len)
+
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    return decode
+
+
+def init_train_state(model: Model, key, quantize_opt: bool = False):
+    params = model.init(key)
+    opt = adamw_init(params, quantize=quantize_opt)
+    return params, opt
+
+
+def use_quantized_opt(arch_name: str) -> bool:
+    """int8 moments for the 100B+ MoE configs (memory fit, DESIGN.md §5)."""
+    return arch_name in ("arctic_480b", "qwen3_moe_235b")

@@ -1,0 +1,7 @@
+"""Model stack: configs, layers, SSM blocks, transformer assembly, registry."""
+
+from repro.models.config import ModelConfig
+from repro.models.registry import ARCHS, build_model, get_config
+from repro.models.transformer import Model
+
+__all__ = ["ARCHS", "Model", "ModelConfig", "build_model", "get_config"]

@@ -1,0 +1,574 @@
+"""Transformer layer primitives shared by all ten architectures.
+
+Everything is functional: ``params`` are nested dicts of arrays, layers are
+pure functions of (params, x).  Activation sharding uses logical axes
+(`sharding.constrain`), a no-op outside a mesh context.  Dense projections
+route through ``_dot`` which can dispatch to the Pallas flex kernels
+(config.use_pallas) or plain XLA einsum (dry-run path).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, key) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))}
+    return {"scale": jnp.zeros((cfg.d_model,))}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, 4)
+    D = cfg.d_model
+    p: Params = {
+        "wq": _init(ks[0], (D, cfg.q_dim)),
+        "wk": _init(ks[1], (D, cfg.kv_dim)),
+        "wv": _init(ks[2], (D, cfg.kv_dim)),
+        "wo": _init(ks[3], (cfg.q_dim, D)),
+    }
+    if cfg.qkv_bias:
+        p |= {
+            "bq": jnp.zeros((cfg.q_dim,)),
+            "bk": jnp.zeros((cfg.kv_dim,)),
+            "bv": jnp.zeros((cfg.kv_dim,)),
+        }
+    if cfg.qk_norm:
+        p |= {"q_norm": jnp.zeros((cfg.head_dim,)), "k_norm": jnp.zeros((cfg.head_dim,))}
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array, xkv: jax.Array | None = None):
+    """Returns q (B,S,H,hd), k/v (B,Skv,Hkv,hd)."""
+    B, S, _ = x.shape
+    xkv = x if xkv is None else xkv
+    Skv = xkv.shape[1]
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dq->bsq", xkv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dq->bsq", xkv, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype), v + p["bv"].astype(x.dtype)
+    # Attention is context-parallel (seq-sharded q under shard_map), so the
+    # flat projections stay SEQ-sharded and heads are never split — this is
+    # head-count agnostic (56 or 8 heads on a 16-way axis both just work) and
+    # avoids the reshape-misalignment full-remats GSPMD produces otherwise.
+    q = constrain(q, "act_batch", "act_seq", None)
+    k = constrain(k, "act_batch", "act_seq", None)
+    v = constrain(v, "act_batch", "act_seq", None)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd) GQA; mask (B|1, 1, Sq, Sk) bool.
+
+    Score tensors are the attention memory hot-spot; they're sharded over the
+    query dim ('act_seq' -> tensor axis) because head counts (8 kv / 7 group)
+    rarely divide a 16-way axis while query chunks always do.
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = constrain(scores, "act_batch", None, None, "act_seq", None)
+    scores = scores * scale
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = constrain(probs, "act_batch", None, None, "act_seq", None)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _sdpa_local(q, k, v, mask, scale):
+    """GQA attention on LOCAL (unsharded) arrays — the shard_map inner body."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _attention_core(
+    cfg: ModelConfig,
+    q: jax.Array,          # (B, Sq_local, H, hd)
+    k: jax.Array,          # (B, Skv, Hkv, hd) — full kv
+    v: jax.Array,
+    *,
+    q_offset,              # global position of q[0] (int or traced scalar)
+    causal: bool,
+    window: int,
+    prefix_len: int,
+    scale: float,
+) -> jax.Array:
+    """Online-softmax (flash) local attention — OUTPUT-STATIONARY in the
+    paper's vocabulary: the (cq, hd) output tile and its running max/sum stay
+    resident while KV tiles stream past; only (cq x ckv) score tiles ever
+    materialise.  Runs identically under shard_map (q seq-sharded,
+    q_offset = shard index * shard length) and standalone.  Windowed layers
+    stream only a (window + cq)-wide KV slice — sub-quadratic for gemma3's
+    local layers.  With cfg.attn_unroll the loops are python-unrolled with
+    STATIC per-q-chunk KV bounds (exact HLO costs, no masked-tile waste)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    Hkv = k.shape[2]
+    g = H // Hkv
+    cq = cfg.attn_chunk if (Sq % cfg.attn_chunk == 0 and Sq > cfg.attn_chunk) else Sq
+    ckv = cfg.attn_chunk if Skv % cfg.attn_chunk == 0 and Skv > cfg.attn_chunk else Skv
+    nq, nkv = Sq // cq, Skv // ckv
+    kv_slice = min(Skv, window + cq) if (window and causal) else Skv
+
+    def kv_tile(carry, q_c, qpos, kv0):
+        """One KV tile starting at kv0: update (acc, m_run, l_run) online."""
+        acc, m_run, l_run, _ = carry
+        k_c = jax.lax.dynamic_slice_in_dim(k, kv0, ckv, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, kv0, ckv, axis=1)
+        kpos = kv0 + jnp.arange(ckv)
+        qg = q_c.reshape(B, cq, Hkv, g, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k_c.astype(jnp.float32))
+        s = s * scale
+        m = jnp.ones((cq, ckv), bool)
+        if causal:
+            m = m & (kpos[None, :] <= qpos[:, None])
+            if window:
+                m = m & (qpos[:, None] - kpos[None, :] < window)
+            if prefix_len:
+                m = m | (kpos[None, :] < prefix_len)
+        s = jnp.where(m[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_run = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_c.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_run, 0), None
+
+    def q_chunk(c):
+        """Full online pass of one q chunk over its needed KV range."""
+        q_c = jax.lax.dynamic_slice_in_dim(q, c * cq, cq, axis=1)
+        qpos = q_offset + c * cq + jnp.arange(cq)
+        # tie the carry init to q so its manual-axes "varying" status matches
+        # the loop body's outputs under shard_map (folded away by XLA)
+        zero = (q_c.astype(jnp.float32) * 0.0).sum()
+        acc = jnp.zeros((B, Hkv, g, cq, hd), jnp.float32) + zero
+        m_run = jnp.full((B, Hkv, g, cq), -1e30, jnp.float32) + zero
+        l_run = jnp.zeros((B, Hkv, g, cq), jnp.float32) + zero
+        if window and causal:
+            start = jnp.clip(qpos[-1] + 1 - kv_slice, 0, Skv - kv_slice)
+            # windowed: a fixed-width slice, tiled in one pass
+            n_t = max(kv_slice // ckv, 1)
+            ct = kv_slice // n_t
+            carry = (acc, m_run, l_run, 0)
+            for t in range(n_t):
+                k0 = start + t * ct
+                kc = jax.lax.dynamic_slice_in_dim(k, k0, ct, axis=1)
+                vc = jax.lax.dynamic_slice_in_dim(v, k0, ct, axis=1)
+                kpos = k0 + jnp.arange(ct)
+                qg = q_c.reshape(B, cq, Hkv, g, hd)
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), kc.astype(jnp.float32)) * scale
+                m = (kpos[None, :] <= qpos[:, None]) & (qpos[:, None] - kpos[None, :] < window)
+                if prefix_len:
+                    m = m | (kpos[None, :] < prefix_len)
+                s = jnp.where(m[None, None, None], s, -1e30)
+                m_new = jnp.maximum(carry[1], jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(carry[1] - m_new)
+                l_new = carry[2] * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+                acc_new = carry[0] * corr[..., None] + pv
+                carry = (acc_new, m_new, l_new, 0)
+            acc, m_run, l_run, _ = carry
+        elif cfg.attn_unroll:
+            # probe path: python-unrolled; static causal bound when the shard
+            # offset is static, else conservatively all tiles (costs are then
+            # an upper bound — documented in EXPERIMENTS §Roofline)
+            carry = (acc, m_run, l_run, 0)
+            for t in range(nkv):
+                if causal and isinstance(q_offset, int) and t * ckv > q_offset + (c + 1) * cq - 1:
+                    break
+                carry, _ = kv_tile(carry, q_c, qpos, t * ckv)
+            acc, m_run, l_run, _ = carry
+        else:
+            # differentiable path: scan all KV tiles (masked tiles waste ~2x
+            # attention FLOPs for causal runs — the Pallas flash kernel with
+            # a bounded grid is the production fix, kernels/flash_attention)
+            def body(carry, t):
+                carry, _ = kv_tile(carry, q_c, qpos, t * ckv)
+                return carry, None
+
+            (acc, m_run, l_run, _), _ = jax.lax.scan(
+                body, (acc, m_run, l_run, 0), jnp.arange(nkv)
+            )
+        o = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        # (B,Hkv,g,cq,hd) -> (B,cq,H,hd)
+        return jnp.moveaxis(o, 3, 1).reshape(B, cq, H, hd).astype(q.dtype)
+
+    q_chunk_ck = jax.checkpoint(q_chunk, static_argnums=())
+    if nq == 1:
+        return q_chunk(0)
+    if cfg.attn_unroll:
+        return jnp.concatenate([q_chunk(c) for c in range(nq)], axis=1)
+    _, os = jax.lax.scan(lambda _, c: (None, q_chunk_ck(c)), None, jnp.arange(nq))
+    return jnp.moveaxis(os, 0, 1).reshape(B, Sq, H, hd)
+
+
+def attention_full(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    window: int = 0,
+    prefix_len: int = 0,
+    causal: bool = True,
+    xkv: jax.Array | None = None,
+    use_rope: bool = True,
+    positions: jax.Array | None = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill): context-parallel shard_map.
+
+    q is sequence-sharded over the tensor axis; K/V are gathered per shard
+    (they're GQA-small).  Inside each shard a chunked flash-style scan bounds
+    score memory; windowed layers touch only a (window + chunk) KV slice, so
+    gemma3's local layers stay sub-quadratic in the HLO.  Falls back to the
+    single-device path when no mesh is active or shapes don't divide.
+    """
+    from repro.models.sharding import active_mesh, extent, spec_for
+
+    B, S, D = x.shape
+    q, k, v = _project_qkv(cfg, p, x, xkv)
+    Skv = k.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, jnp.arange(Skv), cfg.rope_theta)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    core = dict(causal=causal, window=window, prefix_len=prefix_len, scale=scale)
+
+    mesh = active_mesh()
+    ext = extent("act_seq")
+    if mesh is None or ext <= 1 or S % ext:
+        o = _attention_core(cfg, q, k, v, q_offset=0, **core)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        seq_axes = spec_for("act_seq")[0]
+        dp = spec_for("act_batch")[0] if B % extent("act_batch") == 0 else None
+        q_spec = P(dp, seq_axes, None, None)
+        kv_spec = P(dp, None, None, None)
+        Sloc = S // ext
+
+        def local_fn(q_l, k_l, v_l):
+            idx = jax.lax.axis_index(seq_axes)
+            return _attention_core(cfg, q_l, k_l, v_l, q_offset=idx * Sloc, **core)
+
+        o = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(q_spec, kv_spec, kv_spec),
+            out_specs=q_spec,
+        )(q, k, v)
+
+    o = constrain(o, "act_batch", "act_seq", None, None)
+    out = jnp.einsum("bshd,hdD->bsD", o, p["wo"].astype(x.dtype).reshape(cfg.num_heads, cfg.head_dim, D))
+    return out
+
+
+def _decode_core(q, k, v, kpos, pos, window: int, scale: float, axis: str | None):
+    """Flash-style decode attention over a (possibly seq-sharded) cache.
+
+    q (B,1,H,hd); k/v (B,Sloc,Hkv,hd) local shard; kpos global key positions.
+    With ``axis`` set (inside shard_map) the softmax is distributed:
+    pmax for the max, psum for numerator/denominator — so a 32k..500k cache
+    never gets gathered (observed: 40GB/step of cache all-gathers before).
+    """
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, 1, Hkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    m = kpos <= pos
+    if window:
+        m = m & ((pos - kpos) < window)
+    s = jnp.where(m[None, None, None, None, :], s, -1e30)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    if axis is not None:
+        mx = jax.lax.pmax(mx, axis)
+    pr = jnp.exp(s - mx)
+    num = jnp.einsum("bhgqk,bkhd->bqhgd", pr, v.astype(jnp.float32))
+    den = jnp.sum(pr, axis=-1)  # (B,Hkv,g,1)
+    if axis is not None:
+        num = jax.lax.psum(num, axis)
+        den = jax.lax.psum(den, axis)
+    o = num / jnp.maximum(den, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: dict[str, jax.Array],
+    pos: jax.Array,
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One-token decode against a KV cache. x: (B, 1, D); cache k/v (B,Smax,Hkv,hd)."""
+    from repro.models.sharding import active_mesh, extent, spec_for
+
+    B, _, D = x.shape
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    if use_rope:
+        q = rope(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+        k_new = rope(k_new, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    Smax = k.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+
+    mesh = active_mesh()
+    ext = extent("act_seq")
+    Hkv = cfg.num_kv_heads
+    if mesh is None or ext <= 1 or Smax % ext or Hkv % ext == 0:
+        # single-device, or the cache is head-sharded (divisible kv heads)
+        o = _decode_core(q, k, v, jnp.arange(Smax), pos, window, scale, None)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        seq_ax = spec_for("act_seq")[0]
+        dp = spec_for("act_batch")[0] if B % extent("act_batch") == 0 else None
+        Sloc = Smax // ext
+
+        def local_fn(q_l, k_l, v_l, pos_l):
+            idx = jax.lax.axis_index(seq_ax)
+            kpos = idx * Sloc + jnp.arange(Sloc)
+            return _decode_core(q_l, k_l, v_l, kpos, pos_l, window, scale, seq_ax)
+
+        o = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(dp, None, None, None), P(dp, seq_ax, None, None),
+                      P(dp, seq_ax, None, None), P()),
+            out_specs=P(dp, None, None, None),
+        )(q, k, v, pos)
+
+    out = jnp.einsum("bshd,hdD->bsD", o, p["wo"].astype(x.dtype).reshape(cfg.num_heads, cfg.head_dim, D))
+    return out, {"k": k, "v": v}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, layers: int | None = None):
+    L = layers if layers is not None else cfg.num_layers
+    shape = (L, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated + plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    ks = split_keys(key, 3)
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    p = {"w1": _init(ks[0], (D, F)), "w2": _init(ks[1], (F, D))}
+    if cfg.activation in ("silu", "gelu"):
+        p["w3"] = _init(ks[2], (D, F))
+    return p
+
+
+def mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Sequence-parallel FFN: the hidden stays SEQ-sharded (weights are
+    gathered instead — the IS mesh dataflow).  Sharding the hidden on the
+    feature dim would force a per-layer seq all-gather of x, which §Perf C3
+    measured at ~70% of qwen3-train's entire collective term."""
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    if "w3" in p:
+        h = act(h) * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+    else:
+        h = act(h)
+    h = constrain(h, "act_batch", "act_seq", None)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based, EP-sharded, no one-hot matmul dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, 4)
+    D, E, Fe = cfg.d_model, cfg.num_experts, cfg.expert_d_ff or cfg.d_ff
+    p = {
+        "router": _init(ks[0], (D, E), scale=0.02),
+        "we1": _init(ks[1], (E, D, Fe)),
+        "we2": _init(ks[2], (E, Fe, D)),
+        "we3": _init(ks[3], (E, D, Fe)),
+    }
+    return p
+
+
+def moe(cfg: ModelConfig, p: Params, x: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Top-k capacity-based MoE with *block-local* dispatch (GShard/Switch).
+
+    Tokens are grouped into NB blocks aligned with the data-parallel mesh
+    extent; each block scatters into its own (E, cap_local) slots, so the
+    scatter/gather have a leading batch dim that GSPMD shards cleanly (no
+    replication), and the block->expert resharding lowers to an all-to-all —
+    the production EP pattern.  Dispatch avoids one-hot einsums so HLO FLOPs
+    stay proportional to *active* parameters (DESIGN.md §6).
+    """
+    from repro.models.sharding import dp_size
+
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    NB = dp_size()
+    if T % NB or NB < 1:
+        NB = 1
+    Tl = T // NB
+    xf = x.reshape(NB, Tl, D)
+    xf = constrain(xf, "act_batch", None, None)
+
+    # router einsum in model dtype (an f32 copy of xf is 3.8GB/device on the
+    # 480B config); only the small (T, E) logits are upcast for the softmax
+    logits = jnp.einsum("btd,de->bte", xf, p["router"].astype(xf.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (NB, Tl, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # per-block position of each (token, k) assignment within its expert's
+    # capacity.  Small-T floor keeps decode/smoke paths drop-free; training
+    # shapes (Tl >> 256) keep standard capacity-factor behaviour.
+    cap = max(int(cfg.capacity_factor * Tl * K / E), 1, min(Tl, 256))
+    flat_e = expert_idx.reshape(NB, Tl * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (NB, TlK, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot               # exclusive
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = flat_pos < cap
+    safe_pos = jnp.where(keep, flat_pos, cap - 1)
+
+    # dispatch: (NB, E, cap, D) — vmapped scatter over the block dim
+    xk = jnp.repeat(xf[:, :, None, :], K, axis=2).reshape(NB, Tl * K, D)
+    xk = jnp.where(keep[..., None], xk, 0)
+    xk = constrain(xk, "act_batch", None, None)
+
+    def scatter_block(xk_b, e_b, pos_b):
+        return jnp.zeros((E, cap, D), xf.dtype).at[e_b, pos_b].add(xk_b)
+
+    disp = jax.vmap(scatter_block)(xk, flat_e, safe_pos)
+    disp = constrain(disp, "act_batch", "act_expert", None, None)  # all-to-all
+
+    # expert FFN (einsum over expert-sharded params; NB is a batch dim)
+    h1 = jnp.einsum("becd,edf->becf", disp, p["we1"].astype(disp.dtype))
+    h3 = jnp.einsum("becd,edf->becf", disp, p["we3"].astype(disp.dtype))
+    h = jax.nn.silu(h1) * h3
+    h = constrain(h, "act_batch", "act_expert", None, None)
+    eo = jnp.einsum("becf,efd->becd", h, p["we2"].astype(disp.dtype))
+    eo = constrain(eo, "act_batch", "act_expert", None, None)
+
+    # combine: vmapped gather back to block-local tokens
+    def gather_block(eo_b, e_b, pos_b):
+        return eo_b[e_b, pos_b]
+
+    gathered = jax.vmap(gather_block)(eo, flat_e, safe_pos)  # (NB, TlK, D)
+    gathered = constrain(gathered, "act_batch", None, None)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    gates = gate_vals.reshape(NB, Tl * K).astype(gathered.dtype)
+    out = jnp.sum((gathered * gates[..., None]).reshape(NB, Tl, K, D), axis=2)
+
+    # aux losses: load balance (Switch) + router z-loss
+    me = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32).sum(2), axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(me * ce) / K
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out.reshape(B, S, D), {"load_balance": lb, "router_z": z}

@@ -1,0 +1,47 @@
+"""--arch <id> registry: full configs + reduced smoke configs per family."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+ARCHS = (
+    "whisper_base",
+    "zamba2_7b",
+    "qwen15_4b",
+    "minicpm_2b",
+    "qwen3_4b",
+    "gemma3_12b",
+    "paligemma_3b",
+    "rwkv6_7b",
+    "arctic_480b",
+    "qwen3_moe_235b",
+)
+
+_ALIASES = {
+    "whisper-base": "whisper_base",
+    "zamba2-7b": "zamba2_7b",
+    "qwen1.5-4b": "qwen15_4b",
+    "minicpm-2b": "minicpm_2b",
+    "qwen3-4b": "qwen3_4b",
+    "gemma3-12b": "gemma3_12b",
+    "paligemma-3b": "paligemma_3b",
+    "rwkv6-7b": "rwkv6_7b",
+    "arctic-480b": "arctic_480b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", ""))
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def build_model(arch: str, smoke: bool = False, remat: str = "none") -> Model:
+    return Model(get_config(arch, smoke=smoke), remat=remat)

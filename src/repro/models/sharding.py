@@ -1,0 +1,179 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical names to mesh axes.
+
+The model code annotates activations/params with *logical* axes; the launcher
+installs a rules table + mesh via ``use_rules``.  Outside any rules context
+(unit tests, single-CPU smoke runs) every constraint is a no-op, so the same
+model code serves 1-device tests and 512-device dry-runs.
+
+The rules table is deliberately a plain dict — it is the main §Perf hillclimb
+lever (e.g. flipping 'act_seq' between None and 'model' toggles sequence
+parallelism; flipping 'fsdp' between ('data',) and ('pod','data') widens
+ZeRO-3 sharding).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (str | tuple | None)
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": "model",          # sequence-parallel residual stream
+    "act_seq_np": None,          # sequence dim where SP is off (inside attention)
+    "act_heads": "model",
+    "act_embed": None,
+    "act_vocab": "model",
+    "act_expert": "model",
+    # params
+    "fsdp": ("pod", "data"),     # ZeRO-3 axis for the non-TP weight dim
+    "tensor": "model",           # TP axis
+    "expert": "model",           # EP axis
+    "replicated": None,
+}
+
+_RULES: contextvars.ContextVar[dict[str, Any] | None] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "sharding_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Install a mesh + logical rules for the enclosed trace."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    # Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh).
+    def _filter(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        return axes if axes else None
+
+    rules = {k: _filter(v) for k, v in rules.items()}
+    t1, t2 = _RULES.set(rules), _MESH.set(mesh)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(t1)
+        _MESH.reset(t2)
+
+
+def active_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def spec_for(*logical: str | None) -> P:
+    rules = _RULES.get()
+    if rules is None:
+        return P()
+    return P(*(rules.get(ax) if ax else None for ax in logical))
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a rules context.
+
+    Axes whose dim doesn't divide the mapped mesh extent are silently dropped
+    (replicated) — e.g. 8 kv-heads on a 16-way tensor axis.  Uneven GSPMD
+    shardings technically work but trigger involuntary full rematerialisation
+    through reshapes, which is how 40GB/device attention temps happen.
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = list(spec_for(*logical))
+    import math
+
+    for i, axes in enumerate(spec):
+        if axes is None:
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        extent = math.prod(mesh.shape[a] for a in tup)
+        if x.shape[i] % extent:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def extent(logical: str) -> int:
+    """Mesh extent a logical axis maps to (1 outside a rules context)."""
+    mesh = _MESH.get()
+    rules = _RULES.get()
+    if mesh is None or rules is None:
+        return 1
+    axes = rules.get(logical) or ()
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    import math
+
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def dp_size() -> int:
+    """Data-parallel extent of the active mesh (1 outside a rules context)."""
+    mesh = _MESH.get()
+    rules = _RULES.get()
+    if mesh is None or rules is None:
+        return 1
+    axes = rules.get("act_batch") or ()
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    import math
+
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: path-pattern -> logical axes per dim.
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed$", ("tensor", "fsdp")),                 # (V, D) vocab-sharded
+    (r"lm_head$", ("fsdp", "tensor")),               # (D, V)
+    (r"(wq|wk|wv)$", ("fsdp", "tensor")),            # (D, H*hd)
+    (r"wo$", ("tensor", "fsdp")),                    # (H*hd, D)
+    (r"(bq|bk|bv)$", ("tensor",)),
+    (r"(w1|w3)$", ("fsdp", "tensor")),               # (D, F)
+    (r"w2$", ("tensor", "fsdp")),                    # (F, D)
+    (r"router$", ("fsdp", None)),                    # (D, E)
+    (r"(we1|we3)$", ("expert", "fsdp", None)),       # (E, D, Fe)
+    (r"we2$", ("expert", None, "fsdp")),             # (E, Fe, D)
+    (r"(in_proj)$", ("fsdp", "tensor")),             # ssm in projection
+    (r"(out_proj)$", ("tensor", "fsdp")),
+    (r"(r_proj|k_proj|v_proj|g_proj)$", ("fsdp", "tensor")),
+    (r"(dw1)$", ("fsdp", None)),                     # decay lora down (D, r)
+    (r"(dw2)$", (None, "tensor")),                   # decay lora up (r, D)
+    (r"(ck|cr)$", ("fsdp", "tensor")),               # rwkv channel-mix (D, F')
+    (r"cv$", ("tensor", "fsdp")),                    # (F', D)
+    (r"vision_proj$", ("fsdp", "tensor")),
+]
+
+
+def _match_spec(path: str, ndim: int, stacked: bool) -> P:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            want = len(logical) + (1 if stacked else 0)
+            if want == ndim:
+                axes = ((None,) if stacked else ()) + tuple(logical)
+                return spec_for(*axes)
+    return P()  # 1-D scales/biases and anything unmatched: replicated
+
+
+def param_shardings(params: Any) -> Any:
+    """NamedSharding tree matching ``params`` (call inside use_rules)."""
+    mesh = _MESH.get()
+    assert mesh is not None, "param_shardings requires use_rules(mesh)"
+
+    def leaf(path, x) -> NamedSharding:
+        keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        pstr = "/".join(str(k) for k in keys)
+        stacked = pstr.startswith("layers/") or "/layers/" in pstr
+        return NamedSharding(mesh, _match_spec(pstr, x.ndim, stacked))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)

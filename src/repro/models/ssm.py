@@ -1,0 +1,347 @@
+"""State-space / linear-attention blocks: Mamba2 (zamba2) and RWKV-6 (Finch).
+
+Both are instances of a diagonal-decay linear attention
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ,   o_t = r_t^T S'_t
+
+and share one chunked implementation, ``chunked_diag_linear_attn``:
+a `lax.scan` over sequence chunks with exact intra-chunk einsums.  Decay
+factors are kept in log space; chunk size and a log-decay clamp bound every
+exponent so all `exp` calls stay in f32 range (see the in-function note).
+
+For decode the recurrence is applied directly (O(1) per token) — this is why
+the SSM/hybrid architectures run the ``long_500k`` cell that full-attention
+models skip.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _init, rmsnorm, split_keys
+from repro.models.sharding import constrain
+
+Params = dict[str, Any]
+
+LOG_DECAY_MIN = -3.0   # per-step decay floor exp(-3) ~ 0.05
+LA_CHUNK = 16          # intra-chunk exponent bound: |LOG_DECAY_MIN| * 16 = 48 < 88
+
+
+def chunked_diag_linear_attn(
+    r: jax.Array,       # (B, T, H, N)
+    k: jax.Array,       # (B, T, H, N)
+    v: jax.Array,       # (B, T, H, M)
+    log_w: jax.Array,   # (B, T, H, N), in [LOG_DECAY_MIN, 0)
+    diag_scale: jax.Array | None = None,  # (H, N): RWKV's u bonus; None -> ones
+    chunk: int = LA_CHUNK,
+    state0: jax.Array | None = None,      # (B, H, N, M)
+    post_update: bool = False,            # Mamba2 convention: o_t reads S_t
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (o (B,T,H,M), final_state (B,H,N,M)).
+
+    RWKV convention (post_update=False): o_t reads the *pre*-update state plus
+    a u-bonus diagonal -> contribution of j<i decays by exp(cum_{i-1}-cum_j),
+    diagonal is r_i.(u*k_i) v_i.
+    Mamba2 convention (post_update=True): o_t reads the *post*-update state ->
+    j<i decays by exp(cum_i-cum_j), diagonal undecayed r_i.k_i v_i (this falls
+    out of the inclusive-cumsum factoring with the diagonal inside the mask).
+
+    Numerics: with cum = inclusive cumsum(log_w) within a chunk,
+      r_fac = r * exp(cum or cum_prev)   (exponent <= 0)
+      k_fac = k * exp(-cum)              (exponent <= |LOG_DECAY_MIN|*chunk)
+    so every exp() argument is within +-48 — safe in f32.
+    """
+    B, T, H, N = r.shape
+    M = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    C, L = T // chunk, chunk
+
+    rs = r.reshape(B, C, L, H, N)
+    ks = k.reshape(B, C, L, H, N)
+    vs = v.reshape(B, C, L, H, M)
+    lw = log_w.reshape(B, C, L, H, N).astype(jnp.float32)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, M), jnp.float32)
+    ds = jnp.ones((H, N), jnp.float32) if diag_scale is None else diag_scale.astype(jnp.float32)
+    # strict lower triangle (j<i) for RWKV; lower incl. diagonal for Mamba2
+    tri = jnp.tril(jnp.ones((L, L), bool), k=0 if post_update else -1)
+
+    def body(S, inputs):
+        rc, kc, vc, lwc = inputs  # (B, L, H, N/M)
+        rc32, kc32, vc32 = rc.astype(jnp.float32), kc.astype(jnp.float32), vc.astype(jnp.float32)
+        cum = jnp.cumsum(lwc, axis=1)          # inclusive (B, L, H, N)
+        cum_prev = cum - lwc                   # exclusive
+        r_fac = rc32 * jnp.exp(cum if post_update else cum_prev)
+        k_fac = kc32 * jnp.exp(-cum)
+        # intra-chunk scores (B, H, L, L)
+        scores = jnp.einsum("blhn,bmhn->bhlm", r_fac, k_fac)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        o = jnp.einsum("bhlm,bmhv->blhv", scores, vc32)
+        if not post_update:  # RWKV u-bonus diagonal
+            diag = jnp.einsum("blhn,blhn->bhl", rc32 * ds[None, None], kc32)
+            o = o + diag.transpose(0, 2, 1)[..., None] * vc32
+        # inter-chunk: contribution of carried state
+        o = o + jnp.einsum("blhn,bhnv->blhv", r_fac, S)
+        # state update
+        decay_all = jnp.exp(cum[:, -1])        # (B, H, N)
+        k_tail = kc32 * jnp.exp(cum[:, -1:] - cum)  # exponent <= 0
+        S = S * decay_all[..., None] + jnp.einsum("blhn,blhv->bhnv", k_tail, vc32)
+        return S, o
+
+    inputs = (
+        jnp.moveaxis(rs, 1, 0),
+        jnp.moveaxis(ks, 1, 0),
+        jnp.moveaxis(vs, 1, 0),
+        jnp.moveaxis(lw, 1, 0),
+    )
+    S, os = jax.lax.scan(body, state0, inputs)
+    o = jnp.moveaxis(os, 0, 1).reshape(B, T, H, M)
+    return o.astype(v.dtype), S
+
+
+def recurrent_step(
+    r: jax.Array,      # (B, H, N)
+    k: jax.Array,
+    v: jax.Array,      # (B, H, M)
+    log_w: jax.Array,  # (B, H, N)
+    S: jax.Array,      # (B, H, N, M)
+    diag_scale: jax.Array | None = None,
+    post_update: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step of the same recurrence. post_update=True -> Mamba2."""
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = k32[..., :, None] * v32[..., None, :]  # (B,H,N,M)
+    S_new = S * jnp.exp(log_w.astype(jnp.float32))[..., None] + kv
+    if post_update:  # Mamba2: output reads the post-update state
+        o = jnp.einsum("bhn,bhnv->bhv", r32, S_new)
+    else:  # RWKV: output reads pre-update state + u-bonus diagonal
+        ds = jnp.ones_like(k32) if diag_scale is None else diag_scale[None].astype(jnp.float32)
+        o = jnp.einsum("bhn,bhnv->bhv", r32, S)
+        o = o + (r32 * ds * k32).sum(-1)[..., None] * v32
+    return o.astype(v.dtype), S_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2 backbone layer)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, 6)
+    D, Di, N, Hn = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = Di + 2 * N
+    return {
+        "in_proj": _init(ks[0], (D, 2 * Di + 2 * N + Hn)),   # z, x, B, C, dt
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_ch), scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.zeros((Hn,)),
+        "D_skip": jnp.ones((Hn,)),
+        "dt_bias": jnp.zeros((Hn,)),
+        "norm_scale": jnp.zeros((Di,)),
+        "out_proj": _init(ks[2], (Di, D)),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x (B,T,C), w (K,C). Returns y, new_state (B,K-1,C)."""
+    Kw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (Kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(Kw)) + b
+    return jax.nn.silu(y), xp[:, -(Kw - 1) :]
+
+
+def mamba2(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    state: dict[str, jax.Array] | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Mamba2 (SSD) block. x: (B, T, D). state for decode: {conv, ssm}."""
+    B, T, D = x.shape
+    Di, N, Hn, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    # SSM token mixing is sequence-serial (conv + chunk recurrence), so the
+    # model axis lives on CHANNELS/heads here (Di and all split boundaries are
+    # 16-divisible); the residual stream re-shards to seq at the block edge.
+    zxbcdt = constrain(zxbcdt, "act_batch", None, "act_heads")
+    z, xin, Bm, Cm, dt = jnp.split(zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv1d(
+        conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype),
+        None if state is None else state["conv"],
+    )
+    xin, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,Hn)
+    log_w = jnp.clip(-dt * jnp.exp(p["A_log"]), LOG_DECAY_MIN, -1e-6)  # (B,T,Hn)
+
+    v = (xin * dt.repeat(P, axis=-1).astype(xin.dtype)).reshape(B, T, Hn, P)
+    r = jnp.broadcast_to(Cm[:, :, None, :], (B, T, Hn, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, T, Hn, N))
+    lw = jnp.broadcast_to(log_w[..., None], (B, T, Hn, N))
+    v = constrain(v, "act_batch", None, "act_heads", None)
+
+    if state is None:  # train / prefill: chunked parallel form
+        pad = (-T) % LA_CHUNK
+        if pad:
+            padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            o, ssm_state = chunked_diag_linear_attn(
+                padf(r), padf(k), padf(v), padf(jnp.where(lw == 0, -1e-6, lw)),
+                post_update=True,
+            )
+            o = o[:, :T]
+        else:
+            o, ssm_state = chunked_diag_linear_attn(r, k, v, lw, post_update=True)
+    else:  # decode: exact recurrence
+        o, ssm_state = recurrent_step(
+            r[:, 0], k[:, 0], v[:, 0], lw[:, 0], state["ssm"], post_update=True
+        )
+        o = o[:, None]
+
+    o = o.reshape(B, T, Di) + xin * p["D_skip"].repeat(P)[None, None].astype(xin.dtype)
+    o = rmsnorm(o * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    o = constrain(o, "act_batch", None, "act_heads")
+    out = jnp.einsum("bte,ed->btd", o, p["out_proj"].astype(x.dtype))
+    new_state = None if state is None else {"conv": conv_state, "ssm": ssm_state}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    conv_ch = cfg.ssm_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch" (time mix with data-dependent decay + channel mix)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, 10)
+    D, Hs = cfg.d_model, cfg.rwkv_head_size
+    Hn = cfg.rwkv_heads
+    Fc = cfg.d_ff // 2  # channel-mix hidden (rwkv convention ~3.5x)
+    return {
+        "mix": 0.5 * jnp.ones((4, D)),       # token-shift lerp for r,k,v,g
+        "mix_w": 0.5 * jnp.ones((D,)),       # token-shift lerp for decay input
+        "r_proj": _init(ks[0], (D, D)),
+        "k_proj": _init(ks[1], (D, D)),
+        "v_proj": _init(ks[2], (D, D)),
+        "g_proj": _init(ks[3], (D, D)),
+        "dw1": _init(ks[4], (D, cfg.rwkv_decay_lora), scale=0.02),  # Finch decay lora
+        "dw2": _init(ks[5], (cfg.rwkv_decay_lora, D), scale=0.02),
+        "w0": -6.0 * jnp.ones((D,)),
+        "u": _init(ks[6], (Hn, Hs), scale=0.5),
+        "ln_x_scale": jnp.ones((D,)),
+        "out_proj": _init(ks[7], (D, D)),
+        # channel mix
+        "mix_c": 0.5 * jnp.ones((2, D)),
+        "ck": _init(ks[8], (D, Fc)),
+        "cv": _init(ks[9], (Fc, D)),
+        "cr": _init(split_keys(ks[0], 2)[1], (D, D)),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None):
+    """x_{t-1} stream. x (B,T,D); last (B,D) decode carry."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return last[:, None].astype(x.dtype)
+
+
+def rwkv6_time_mix(
+    cfg: ModelConfig, p: Params, x: jax.Array,
+    state: dict[str, jax.Array] | None = None,
+):
+    B, T, D = x.shape
+    Hn, Hs = cfg.rwkv_heads, cfg.rwkv_head_size
+    prev = _token_shift(x, None if state is None else state["shift_t"])
+    mix = p["mix"].astype(x.dtype)
+
+    def lerp(i):
+        return x + (prev - x) * mix[i]
+
+    # wkv recurrence is head-local: the model axis rides heads (64 % 16 == 0)
+    def hshard(a):
+        return constrain(a, "act_batch", None, "act_heads", None)
+
+    r = hshard(jnp.einsum("btd,de->bte", lerp(0), p["r_proj"].astype(x.dtype)).reshape(B, T, Hn, Hs))
+    k = hshard(jnp.einsum("btd,de->bte", lerp(1), p["k_proj"].astype(x.dtype)).reshape(B, T, Hn, Hs))
+    v = hshard(jnp.einsum("btd,de->bte", lerp(2), p["v_proj"].astype(x.dtype)).reshape(B, T, Hn, Hs))
+    g = jnp.einsum("btd,de->bte", lerp(3), p["g_proj"].astype(x.dtype))
+
+    # Finch: data-dependent per-channel decay via low-rank projection
+    xw = x + (prev - x) * p["mix_w"].astype(x.dtype)
+    dd = jnp.einsum(
+        "btr,rd->btd",
+        jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["dw1"].astype(x.dtype))),
+        p["dw2"].astype(x.dtype),
+    )
+    log_w = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32), -10.0, 1.0))
+    log_w = jnp.clip(log_w, LOG_DECAY_MIN, -1e-6).reshape(B, T, Hn, Hs)
+
+    if state is None:
+        pad = (-T) % LA_CHUNK
+        if pad:
+            padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            o, wkv_state = chunked_diag_linear_attn(
+                padf(r), padf(k), padf(v), padf(jnp.where(log_w == 0, -1e-6, log_w)), p["u"]
+            )
+            o = o[:, :T]
+        else:
+            o, wkv_state = chunked_diag_linear_attn(r, k, v, log_w, p["u"])
+    else:
+        o, wkv_state = recurrent_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state["wkv"], diag_scale=p["u"]
+        )
+        o = o[:, None]
+
+    o = o.reshape(B, T, D)
+    # group-norm per head (layernorm over head dim), then gate
+    o = o.reshape(B, T, Hn, Hs)
+    mu = o.mean(-1, keepdims=True)
+    var = ((o - mu) ** 2).mean(-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, T, D) * p["ln_x_scale"].astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("btd,de->bte", o, p["out_proj"].astype(x.dtype))
+    new_state = None if state is None else {"shift_t": x[:, -1], "wkv": wkv_state}
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    cfg: ModelConfig, p: Params, x: jax.Array,
+    state: dict[str, jax.Array] | None = None,
+):
+    prev = _token_shift(x, None if state is None else state["shift_c"])
+    mix = p["mix_c"].astype(x.dtype)
+    xk = x + (prev - x) * mix[0]
+    xr = x + (prev - x) * mix[1]
+    kk = jnp.einsum("btd,df->btf", xk, p["ck"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("btf,fd->btd", kk, p["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cr"].astype(x.dtype)))
+    out = rr * vv
+    new_state = None if state is None else {"shift_c": x[:, -1]}
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    return {
+        "shift_t": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "shift_c": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros(
+            (batch, cfg.rwkv_heads, cfg.rwkv_head_size, cfg.rwkv_head_size), jnp.float32
+        ),
+    }

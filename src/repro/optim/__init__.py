@@ -1,0 +1,15 @@
+"""Optimizers and schedules (no optax dependency)."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, quantize_state
+from .schedules import constant, cosine, linear_warmup, wsd
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "constant",
+    "cosine",
+    "linear_warmup",
+    "quantize_state",
+    "wsd",
+]

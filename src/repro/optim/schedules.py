@@ -1,0 +1,34 @@
+"""LR schedules, including minicpm's WSD (warmup-stable-decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def constant(step, peak: float, warmup: int = 0):
+    return linear_warmup(step, warmup, peak) if warmup else jnp.full_like(
+        jnp.asarray(step, jnp.float32), peak
+    )
+
+
+def cosine(step, total: int, peak: float, warmup: int = 0, floor: float = 0.0):
+    w = linear_warmup(step, warmup, peak)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    c = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, w, c)
+
+
+def wsd(step, total: int, peak: float, warmup: int = 0, decay_frac: float = 0.1,
+        floor: float = 0.0):
+    """Warmup-Stable-Decay (MiniCPM): flat plateau, then sharp decay tail."""
+    w = linear_warmup(step, warmup, peak)
+    decay_start = int(total * (1 - decay_frac))
+    t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    d = peak * (floor / peak) ** t if floor > 0 else peak * (1 - t)
+    stable = jnp.full_like(jnp.asarray(step, jnp.float32), peak)
+    out = jnp.where(step < warmup, w, jnp.where(step < decay_start, stable, d))
+    return out

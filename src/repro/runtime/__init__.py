@@ -1,0 +1,19 @@
+"""Distributed runtime: fault tolerance, stragglers, gradient compression."""
+
+from .compression import compressed_psum, compression_ratio, dequantize_int8, quantize_int8
+from .fault_tolerance import ElasticController, RunnerConfig, SimulatedNodeFailure, TrainRunner
+from .straggler import ShardAssignment, StragglerConfig, StragglerTracker
+
+__all__ = [
+    "ElasticController",
+    "RunnerConfig",
+    "ShardAssignment",
+    "SimulatedNodeFailure",
+    "StragglerConfig",
+    "StragglerTracker",
+    "TrainRunner",
+    "compressed_psum",
+    "compression_ratio",
+    "dequantize_int8",
+    "quantize_int8",
+]

@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod all-reduce.
+
+The pod axis rides DCN (slow); int8 block-quantised gradients with error
+feedback cut that traffic 4x.  ``compressed_psum`` is the shard_map-side op:
+quantise locally -> all-reduce int32 (sums of int8 fit easily) -> dequantise,
+with the quantisation residual carried to the next step (error feedback keeps
+SGD/Adam convergence — tests/test_runtime.py checks the residual telescopes).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+BLOCK = 256
+
+
+def _blockify(g: jax.Array) -> tuple[jax.Array, tuple]:
+    n = g.size
+    blocks = -(-n // BLOCK)
+    flat = jnp.pad(g.reshape(-1).astype(jnp.float32), (0, blocks * BLOCK - n))
+    return flat.reshape(blocks, BLOCK), (g.shape, n)
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array, tuple]:
+    b, meta = _blockify(g)
+    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+    return q, scale, meta
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, meta: tuple) -> jax.Array:
+    shape, n = meta
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+def compress_residual(g: jax.Array, residual: jax.Array | None):
+    """Error feedback: quantise (g + residual), return (q, scale, new_residual)."""
+    g32 = g.astype(jnp.float32)
+    if residual is not None:
+        g32 = g32 + residual
+    q, scale, meta = quantize_int8(g32)
+    deq = dequantize_int8(q, scale, meta)
+    return q, scale, meta, g32 - deq
+
+
+def compressed_psum(g: jax.Array, axis_name: str, residual: jax.Array | None = None):
+    """int8-compressed psum over ``axis_name`` (use inside shard_map).
+
+    Two-phase scheme: (1) agree on a per-block GLOBAL scale via a tiny f32
+    pmax (1/256 of the payload), (2) quantise against it and psum the int8
+    payload in int32 — so the sum is exact up to one shared quantisation step
+    per element, and the error feedback residual carries the rest.
+
+    Returns (mean_gradient, new_residual).
+    """
+    g32 = g.astype(jnp.float32)
+    if residual is not None:
+        g32 = g32 + residual
+    b, meta = _blockify(g32)
+    n = jax.lax.psum(1, axis_name)
+    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0 + 1e-12
+    scale = jax.lax.pmax(scale, axis_name)  # shared scale (tiny collective)
+    q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
+    qs = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    deq = (qs.astype(jnp.float32) / n) * scale
+    shape, cnt = meta
+    sent = (q.astype(jnp.float32) * scale).reshape(-1)[:cnt].reshape(shape)
+    new_res = g32 - sent
+    return deq.reshape(-1)[:cnt].reshape(shape), new_res
+
+
+def compression_ratio(g: jax.Array) -> float:
+    q, scale, _ = quantize_int8(g)
+    return (g.size * 4) / (q.size * 1 + scale.size * 4)

@@ -1,0 +1,71 @@
+"""Straggler detection and mitigation.
+
+Per-host step-time heartbeats feed an online p50/p99 tracker; a host whose
+EWMA exceeds ``threshold x p50`` for ``patience`` consecutive steps is flagged
+and its data shards re-assigned to healthy hosts (possible because the
+pipeline is stateless — data/pipeline.py).  On CPU CI this runs against
+simulated clocks (tests/test_runtime.py); on a real pod the same tracker is
+fed from host heartbeat timestamps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    threshold: float = 1.5   # x median
+    patience: int = 3
+    ewma: float = 0.5
+
+
+class StragglerTracker:
+    def __init__(self, num_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.num_hosts = num_hosts
+        self.ewma_times = np.zeros(num_hosts)
+        self.strikes = np.zeros(num_hosts, dtype=int)
+        self.history: list[np.ndarray] = []
+
+    def observe(self, step_times: np.ndarray) -> list[int]:
+        """step_times: per-host seconds for this step. Returns flagged hosts."""
+        a = self.cfg.ewma
+        self.ewma_times = np.where(
+            self.ewma_times == 0, step_times, a * step_times + (1 - a) * self.ewma_times
+        )
+        self.history.append(step_times)
+        med = np.median(self.ewma_times)
+        slow = self.ewma_times > self.cfg.threshold * med
+        self.strikes = np.where(slow, self.strikes + 1, 0)
+        return [int(h) for h in np.nonzero(self.strikes >= self.cfg.patience)[0]]
+
+    def p99_step_time(self) -> float:
+        if not self.history:
+            return 0.0
+        return float(np.percentile(np.concatenate(self.history), 99))
+
+
+@dataclasses.dataclass
+class ShardAssignment:
+    """Maps data shards -> hosts; rebalances away from flagged hosts."""
+
+    num_shards: int
+    num_hosts: int
+
+    def __post_init__(self):
+        self.assignment = {s: s % self.num_hosts for s in range(self.num_shards)}
+
+    def reassign(self, flagged: list[int]) -> dict[int, int]:
+        healthy = [h for h in range(self.num_hosts) if h not in flagged]
+        if not healthy:
+            return self.assignment
+        i = 0
+        for s, h in self.assignment.items():
+            if h in flagged:
+                self.assignment[s] = healthy[i % len(healthy)]
+                i += 1
+        return self.assignment

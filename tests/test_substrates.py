@@ -1,0 +1,174 @@
+"""Optimizer, schedules, checkpoint, data pipeline."""
+
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.data import DataConfig, TokenStream
+from repro.optim import adamw_init, adamw_update, cosine, wsd
+from repro.optim.adamw import _dequantize, _quantize
+
+
+def _params():
+    return {
+        "w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 48)), jnp.float32),
+        "b": jnp.zeros((48,)),
+        "nested": {"e": jnp.ones((10, 8, 6))},
+    }
+
+
+def _grads():
+    return jax.tree.map(
+        lambda p: jnp.asarray(np.random.default_rng(1).normal(size=p.shape), jnp.float32) * 0.1,
+        _params(),
+    )
+
+
+def test_adamw_fp32_basic():
+    p, g = _params(), _grads()
+    st_ = adamw_init(p)
+    p2, st2 = adamw_update(p, g, st_, 1e-2)
+    assert int(st2.step) == 1
+    assert all(jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(p2))
+
+
+def test_adamw_int8_close_to_fp32():
+    p, g = _params(), _grads()
+    pf, _ = adamw_update(p, g, adamw_init(p), 1e-2)
+    pq, sq = adamw_update(p, g, adamw_init(p, quantize=True), 1e-2)
+    d = max(
+        float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pq))
+    )
+    assert d < 2e-4, d
+    assert all(x.dtype == jnp.int8 for x in jax.tree.leaves(sq.m))
+
+
+def test_adamw_int8_multi_step_tracks_fp32():
+    """int8-m/bf16-v drift stays a small fraction of actual parameter
+    movement under realistic (varying) gradients."""
+    p = _params()
+    sf, sq = adamw_init(p), adamw_init(p, quantize=True)
+    pf = pq = p
+    for i in range(10):
+        g = jax.tree.map(
+            lambda q, i=i: jnp.asarray(
+                np.random.default_rng(100 + i).normal(size=q.shape), jnp.float32
+            ) * 0.1,
+            p,
+        )
+        pf, sf = adamw_update(pf, g, sf, 1e-3)
+        pq, sq = adamw_update(pq, g, sq, 1e-3)
+    drift = max(
+        float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pq))
+    )
+    move = max(
+        float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(p))
+    )
+    assert drift < 0.1 * move, (drift, move)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_bound(seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(7, 33)), jnp.float32)
+    q, s = _quantize(x)
+    rec = _dequantize(q, s, x.shape, x.size)
+    # per-channel absmax int8: error <= scale/2 per element
+    bound = np.asarray(s).max() * 0.51 + 1e-9
+    assert float(jnp.abs(rec - x).max()) <= bound
+
+
+def test_wsd_schedule_shape():
+    total, peak, warm = 1000, 1.0, 100
+    assert float(wsd(0, total, peak, warm)) < 0.02
+    assert float(wsd(warm, total, peak, warm)) == pytest.approx(peak, rel=0.02)
+    assert float(wsd(total // 2, total, peak, warm)) == pytest.approx(peak)
+    assert float(wsd(total, total, peak, warm)) < 0.01
+
+
+def test_cosine_schedule_monotone_decay():
+    vals = [float(cosine(s, 1000, 1.0, warmup=10)) for s in range(10, 1000, 97)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+# ---- checkpoint ------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_latest():
+    p = _params()
+    with tempfile.TemporaryDirectory() as d:
+        assert latest_step(d) is None
+        save_checkpoint(d, 10, p, extra={"rng": 7})
+        save_checkpoint(d, 20, jax.tree.map(lambda a: a + 1, p))
+        assert latest_step(d) == 20
+        loaded, extra = load_checkpoint(d, 10, p)
+        np.testing.assert_array_equal(np.asarray(loaded["w"]), np.asarray(p["w"]))
+        assert extra["rng"] == 7
+
+
+def test_checkpoint_atomic_commit():
+    """A partially-written (tmp) checkpoint is never visible."""
+    p = _params()
+    with tempfile.TemporaryDirectory() as d:
+        os.makedirs(os.path.join(d, ".tmp_step_99"))  # simulated crash debris
+        save_checkpoint(d, 5, p)
+        assert latest_step(d) == 5
+
+
+def test_checkpoint_async():
+    import time
+
+    p = _params()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, p, async_write=True)
+        for _ in range(100):
+            if latest_step(d) == 3:
+                break
+            time.sleep(0.05)
+        assert latest_step(d) == 3
+
+
+# ---- data pipeline ---------------------------------------------------------
+
+
+def test_data_deterministic_per_step():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+    s1, s2 = TokenStream(cfg), TokenStream(cfg)
+    b1, b2 = s1.batch(17), s2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch(18)["tokens"], b1["tokens"])
+
+
+def test_data_shards_disjoint_and_stateless():
+    kw = dict(vocab_size=1000, seq_len=16, global_batch=8, seed=0, num_shards=4)
+    shards = [TokenStream(DataConfig(shard_id=i, **kw)) for i in range(4)]
+    batches = [s.batch(5)["tokens"] for s in shards]
+    assert all(b.shape == (2, 16) for b in batches)
+    assert not np.array_equal(batches[0], batches[1])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    b = TokenStream(cfg).batch(0)
+    assert b["tokens"].shape == b["labels"].shape
+    assert (b["labels"] < 100).all() and (b["labels"] >= 0).all()
+
+
+def test_memmap_corpus_roundtrip(tmp_path):
+    from repro.data import write_corpus
+
+    toks = np.arange(10_000) % 50_000
+    path = str(tmp_path / "corpus.bin")
+    write_corpus(path, toks)
+    cfg = DataConfig(vocab_size=50_000, seq_len=64, global_batch=4, corpus_path=path)
+    b = TokenStream(cfg).batch(2)
+    assert b["tokens"].shape == (4, 64)
+    # consecutive labels continue the corpus sequence
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
