@@ -9,7 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ALL_DATAFLOWS, Dataflow, WORKLOADS, overheads, simulate_network
+from repro.core import ALL_DATAFLOWS, WORKLOADS, overheads, simulate_network
 from repro.kernels import flex_matmul, matmul_ref
 
 # 1. the paper's experiment: per-layer dataflow choice beats any static one

@@ -24,7 +24,6 @@ core claim is that the optimum is a function of layer shape, decidable offline.
 from __future__ import annotations
 
 import enum
-import math
 from dataclasses import dataclass
 
 
@@ -233,10 +232,24 @@ def best_kernel_dataflow(
     return df, cost
 
 
+DEFAULT_BLOCK_CANDIDATES = (128, 256, 512, 1024, 2048, 4096, 8192)
+
+
+def kernel_block_candidates(
+    d: int, candidates: tuple[int, ...] = DEFAULT_BLOCK_CANDIDATES
+) -> list[int]:
+    """MXU-aligned block sizes worth trying for one GEMM dimension of ``d``."""
+    rounded = max(_ceil_div(d, 128) * 128, 128)
+    cs = [c for c in candidates if c <= rounded]
+    if rounded <= 16384 and rounded not in cs:
+        cs.append(rounded)  # exact-fit block (e.g. bk = K kills partials)
+    return cs or [128]
+
+
 def tune_kernel_dataflow(
     shape: GemmShape,
     vmem_limit: int = 96 * 1024 * 1024,
-    candidates: tuple[int, ...] = (128, 256, 512, 1024, 2048, 4096, 8192),
+    candidates: tuple[int, ...] = DEFAULT_BLOCK_CANDIDATES,
 ) -> tuple[Dataflow, tuple[int, int, int], KernelCost]:
     """Co-tune (dataflow, block shape) under a VMEM budget.
 
@@ -248,11 +261,7 @@ def tune_kernel_dataflow(
     """
 
     def blocks_for(d: int) -> list[int]:
-        rounded = max(_ceil_div(d, 128) * 128, 128)
-        cs = [c for c in candidates if c <= rounded]
-        if rounded <= 16384 and rounded not in cs:
-            cs.append(rounded)  # exact-fit block (e.g. bk = K kills partials)
-        return cs or [128]
+        return kernel_block_candidates(d, candidates)
 
     best: tuple[float, Dataflow, tuple[int, int, int], KernelCost] | None = None
     for df in ALL_DATAFLOWS:

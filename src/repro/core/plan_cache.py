@@ -1,0 +1,93 @@
+"""Persistent CMU plan cache.
+
+The measured autotune (``cmu.autotune_plan``) is a one-time, offline,
+pre-deployment step — exactly the paper's CMU programming procedure.  This
+module persists its output so serve/train **reload** plans instead of
+re-tuning on every launch, and provides the process-wide "programmed CMU"
+the model stack consults at trace time:
+
+  * ``save_plan`` / ``load_plan``     — versioned JSON on disk
+  * ``load_or_autotune``              — the serve/train entry point
+  * ``activate_plan`` / ``active_plan`` — the in-process register file the
+    paper's CMU MUX signals map to; ``models.layers.linear`` reads it when
+    dispatching each projection to a flex kernel.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .cmu import DataflowPlan, autotune_plan
+
+PLAN_CACHE_VERSION = 1
+
+_ACTIVE_PLAN: DataflowPlan | None = None
+
+
+def save_plan(path: str, plan: DataflowPlan) -> None:
+    """Persist a plan as versioned JSON (atomic rename, so a crashed tune
+    never leaves a half-written cache for the next launch to trip on)."""
+    payload = {"version": PLAN_CACHE_VERSION, "layers": json.loads(plan.to_json())}
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
+
+
+def load_plan(path: str) -> DataflowPlan:
+    with open(path) as f:
+        try:
+            payload = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"plan cache {path} is not valid JSON ({e}) — delete it and re-tune"
+            ) from e
+    if payload.get("version") != PLAN_CACHE_VERSION:
+        raise ValueError(
+            f"plan cache {path} has version {payload.get('version')}, "
+            f"expected {PLAN_CACHE_VERSION} — delete it and re-tune"
+        )
+    return DataflowPlan.from_json(json.dumps(payload["layers"]))
+
+
+def plan_matches(plan: DataflowPlan, gemms) -> bool:
+    """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
+    the guard against silently applying a cache tuned for another arch or
+    batch geometry."""
+    planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
+    wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
+    return planned == wanted
+
+
+def load_or_autotune(path: str | None, gemms, **autotune_kw):
+    """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
+    matches ``gemms``, otherwise a fresh autotune persisted to ``path``
+    (when given).  A cache tuned for different GEMM shapes (other arch,
+    other batch geometry) is re-tuned and overwritten, not silently applied."""
+    if path and os.path.exists(path):
+        plan = load_plan(path)
+        if plan_matches(plan, gemms):
+            return plan, True
+        import logging
+
+        logging.getLogger(__name__).warning(
+            "plan cache %s was tuned for different GEMM shapes; re-tuning", path
+        )
+    plan = autotune_plan(gemms, **autotune_kw)
+    if path:
+        save_plan(path, plan)
+    return plan, False
+
+
+def activate_plan(plan: DataflowPlan | None) -> None:
+    """Program the process-wide CMU: subsequent traced ``linear`` calls
+    dispatch per the plan.  Pass None to clear."""
+    global _ACTIVE_PLAN
+    _ACTIVE_PLAN = plan
+
+
+def active_plan() -> DataflowPlan | None:
+    return _ACTIVE_PLAN

@@ -19,7 +19,6 @@ from .dataflow import (
     ConvLayer,
     Dataflow,
     GemmShape,
-    best_dataflow,
     systolic_cycles,
 )
 

@@ -1,17 +1,30 @@
 """Pallas TPU kernels for the Flex-TPU reproduction."""
 
 from .flash_attention import flash_attention, mha_flash
-from .flex_matmul import DEFAULT_BLOCK, matmul, matmul_is, matmul_os, matmul_ws
-from .ops import auto_matmul, flex_matmul
-from .ref import attention_ref, blocked_matmul_ref, matmul_ref
+from .flex_matmul import (
+    ACTIVATIONS,
+    DEFAULT_BLOCK,
+    fused_matmul,
+    matmul,
+    matmul_is,
+    matmul_os,
+    matmul_ws,
+)
+from .ops import auto_matmul, default_interpret, flex_linear, flex_matmul
+from .ref import attention_ref, blocked_matmul_ref, linear_ref, matmul_ref
 
 __all__ = [
+    "ACTIVATIONS",
     "DEFAULT_BLOCK",
     "attention_ref",
     "auto_matmul",
     "blocked_matmul_ref",
+    "default_interpret",
     "flash_attention",
+    "flex_linear",
     "flex_matmul",
+    "fused_matmul",
+    "linear_ref",
     "matmul",
     "matmul_is",
     "matmul_os",

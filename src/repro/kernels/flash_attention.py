@@ -19,7 +19,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flex_matmul import CompilerParams, _VMEM
 
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
@@ -92,11 +93,11 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((bq, hd), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, 1), jnp.float32),
-            pltpu.MemorySpace.VMEM((bq, 1), jnp.float32),
+            _VMEM((bq, hd), jnp.float32),
+            _VMEM((bq, 1), jnp.float32),
+            _VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

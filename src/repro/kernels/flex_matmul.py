@@ -16,16 +16,33 @@ steps, determined by the grid loop order and each ``BlockSpec.index_map``:
 
 All three compute bit-identical results (f32 accumulation); they differ only
 in HBM traffic and residency, which is the paper's point.  The CMU
-(`core.cmu.plan_kernels`) picks per layer offline; dispatch is static at
+(`core.cmu.autotune_plan`) picks per layer offline; dispatch is static at
 trace time (the JAX analogue of programming the CMU mux signals).
 
+Every kernel supports a **fused epilogue** — bias add, activation
+(relu/gelu/silu), residual add, and output dtype cast — applied inside the
+kernel while the f32 accumulator block is still resident in VMEM:
+
+  OS    the epilogue runs in the final-k ``_flush`` branch, so the epilogue
+        reads the scratch accumulator and the single HBM write already
+        carries the finished (possibly low-precision) result.
+  WS/IS the epilogue runs in a last-k-step branch: partial sums stream
+        through an f32 staging buffer exactly as in the plain kernel, and at
+        the last k step the finished block is written once to a separate
+        output buffer in the target dtype.
+
+Fusing the epilogue removes the extra HBM round-trips XLA would otherwise
+spend re-streaming the matmul output through bias/activation/residual ops —
+the on-chip-results argument of Jouppi et al. (2017) applied at VMEM level.
+
 Kernels are written for TPU (MXU-aligned blocks, VMEM scratch) and validated
-on CPU with ``interpret=True`` against ``ref.matmul_ref``.
+on CPU with ``interpret=True`` against ``ref.matmul_ref`` / ``ref.linear_ref``.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -36,14 +53,50 @@ from repro.core.dataflow import Dataflow
 
 DEFAULT_BLOCK = (256, 256, 256)  # (bm, bk, bn) — MXU-aligned, ~768KB working set
 
+# jax 0.4.x names these TPUCompilerParams / VMEM; newer releases renamed them
+# to CompilerParams / MemorySpace.VMEM.  Resolve whichever exists once.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+_VMEM = getattr(getattr(pltpu, "MemorySpace", None), "VMEM", None) or pltpu.VMEM
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": lambda y: jnp.maximum(y, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _epilogue(y, bias_ref, res_ref, activation: str | None):
+    """bias -> activation -> residual, all on the resident f32 block."""
+    if bias_ref is not None:
+        y = y + bias_ref[...].astype(jnp.float32)
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    if res_ref is not None:
+        y = y + res_ref[...].astype(jnp.float32)
+    return y
+
 
 # ---------------------------------------------------------------------------
 # Kernel bodies
 # ---------------------------------------------------------------------------
 
 
-def _os_kernel(a_ref, b_ref, o_ref, acc_ref):
-    """Output-stationary: accumulate in VMEM scratch across the k grid axis."""
+def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool):
+    """Output-stationary: accumulate in VMEM scratch across the k grid axis.
+
+    The fused epilogue runs in the ``_flush`` branch — the accumulator block
+    is still in VMEM, so bias/activation/residual cost zero extra HBM trips.
+    """
+    it = iter(refs)
+    a_ref, b_ref = next(it), next(it)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_res else None
+    o_ref, acc_ref = next(it), next(it)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -56,10 +109,12 @@ def _os_kernel(a_ref, b_ref, o_ref, acc_ref):
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        y = _epilogue(acc_ref[...], bias_ref, res_ref, activation)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
-def _stream_accum_kernel(a_ref, b_ref, o_ref):
+def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
+                         has_res: bool, fused: bool):
     """WS/IS shared body: one MAC into the HBM-streamed partial-sum block.
 
     The output block is revisited non-consecutively across the outer k axis,
@@ -70,16 +125,34 @@ def _stream_accum_kernel(a_ref, b_ref, o_ref):
     pallas_call (whose pinned operand ignores the innermost axis), not in the
     MAC itself — mirroring the paper's PE, where the same MAC hardware serves
     all three dataflows and only the mux selection changes.
+
+    With ``fused`` the last-k-step branch applies the epilogue to the fully
+    accumulated f32 partial block and writes the finished result once to a
+    separate output buffer in the target dtype (partials must stay f32, so
+    the low-precision final cast needs its own buffer).
     """
+    it = iter(refs)
+    a_ref, b_ref = next(it), next(it)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_res else None
+    part_ref = next(it)
+    out_ref = next(it) if fused else None
     k = pl.program_id(0)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        part_ref[...] = jnp.zeros_like(part_ref)
 
-    o_ref[...] += jnp.dot(
+    part_ref[...] += jnp.dot(
         a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    ).astype(part_ref.dtype)
+
+    if fused:
+
+        @pl.when(k == pl.num_programs(0) - 1)
+        def _flush():
+            y = _epilogue(part_ref[...], bias_ref, res_ref, activation)
+            out_ref[...] = y.astype(out_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -91,14 +164,30 @@ def _check(M: int, K: int, N: int, bm: int, bk: int, bn: int) -> None:
     if M % bm or K % bk or N % bn:
         raise ValueError(
             f"matmul dims ({M},{K},{N}) must divide blocks ({bm},{bk},{bn}); "
-            "use ops.flex_matmul which pads"
+            "use ops.flex_matmul / ops.flex_linear which pad"
         )
+
+
+def _epilogue_inputs(bias, res, bias_map, out_map, bm, bn):
+    """Extra (arrays, specs) for whichever epilogue operands are present."""
+    arrays, specs = [], []
+    if bias is not None:
+        arrays.append(bias)
+        specs.append(pl.BlockSpec((1, bn), bias_map))
+    if res is not None:
+        arrays.append(res)
+        specs.append(pl.BlockSpec((bm, bn), out_map))
+    return arrays, specs
 
 
 def matmul_os(
     a: jax.Array,
     b: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    activation: str | None = None,
+    out_dtype: jnp.dtype | None = None,
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
@@ -108,21 +197,30 @@ def matmul_os(
     bm, bk, bn = block
     _check(M, K, N, bm, bk, bn)
     grid = (M // bm, N // bn, K // bk)
+    out_map = lambda i, j, k: (i, j)
+    extra, extra_specs = _epilogue_inputs(
+        bias, residual, lambda i, j, k: (0, j), out_map, bm, bn
+    )
+    kern = functools.partial(
+        _os_kernel, activation=activation,
+        has_bias=bias is not None, has_res=residual is not None,
+    )
     return pl.pallas_call(
-        _os_kernel,
+        kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            *extra_specs,
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        out_specs=pl.BlockSpec((bm, bn), out_map),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or jnp.float32),
+        scratch_shapes=[_VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(a, b)
+    )(a, b, *extra)
 
 
 def _matmul_stream(
@@ -130,6 +228,10 @@ def _matmul_stream(
     b: jax.Array,
     *,
     stationary: str,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    activation: str | None = None,
+    out_dtype: jnp.dtype | None = None,
     block: tuple[int, int, int],
     interpret: bool,
 ) -> jax.Array:
@@ -143,34 +245,67 @@ def _matmul_stream(
         grid = (K // bk, N // bn, M // bm)
         a_spec = pl.BlockSpec((bm, bk), lambda k, j, i: (i, k))
         b_spec = pl.BlockSpec((bk, bn), lambda k, j, i: (k, j))
-        c_spec = pl.BlockSpec((bm, bn), lambda k, j, i: (i, j))
+        c_map = lambda k, j, i: (i, j)
+        bias_map = lambda k, j, i: (0, j)
     elif stationary == "input":
         # IS: grid (k, i, j) — A[i,k] constant across innermost j (pinned).
         grid = (K // bk, M // bm, N // bn)
         a_spec = pl.BlockSpec((bm, bk), lambda k, i, j: (i, k))
         b_spec = pl.BlockSpec((bk, bn), lambda k, i, j: (k, j))
-        c_spec = pl.BlockSpec((bm, bn), lambda k, i, j: (i, j))
+        c_map = lambda k, i, j: (i, j)
+        bias_map = lambda k, i, j: (0, j)
     else:  # pragma: no cover
         raise ValueError(stationary)
-    return pl.pallas_call(
-        _stream_accum_kernel,
+    fused = (
+        bias is not None or residual is not None or activation is not None
+        or (out_dtype is not None and jnp.dtype(out_dtype) != jnp.float32)
+    )
+    # The residual is only read in the last-k flush, but its natural (i, j)
+    # index map changes every inner step while k is outermost — that would
+    # re-stream the whole residual K//bk times.  Pin it to block (0, 0)
+    # until the final k step so it is fetched exactly once overall.
+    nk = K // bk
+    last = nk - 1
+
+    def res_map(*ids):
+        bi, bj = c_map(*ids)
+        on_last = ids[0] == last
+        return (jax.lax.select(on_last, bi, 0), jax.lax.select(on_last, bj, 0))
+
+    extra, extra_specs = _epilogue_inputs(bias, residual, bias_map, res_map, bm, bn)
+    kern = functools.partial(
+        _stream_accum_kernel, activation=activation,
+        has_bias=bias is not None, has_res=residual is not None, fused=fused,
+    )
+    out_specs = pl.BlockSpec((bm, bn), c_map)
+    out_shape = jax.ShapeDtypeStruct((M, N), jnp.float32)
+    if fused:
+        # f32 partial staging buffer + finished output in the target dtype
+        out_specs = [out_specs, pl.BlockSpec((bm, bn), c_map)]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((M, N), out_dtype or jnp.float32)]
+    result = pl.pallas_call(
+        kern,
         grid=grid,
-        in_specs=[a_spec, b_spec],
-        out_specs=c_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        in_specs=[a_spec, b_spec, *extra_specs],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
         ),
         interpret=interpret,
-    )(a, b)
+    )(a, b, *extra)
+    return result[1] if fused else result
 
 
-def matmul_ws(a, b, *, block=DEFAULT_BLOCK, interpret=False):
-    return _matmul_stream(a, b, stationary="weight", block=block, interpret=interpret)
+def matmul_ws(a, b, *, block=DEFAULT_BLOCK, interpret=False, **epilogue):
+    return _matmul_stream(a, b, stationary="weight", block=block,
+                          interpret=interpret, **epilogue)
 
 
-def matmul_is(a, b, *, block=DEFAULT_BLOCK, interpret=False):
-    return _matmul_stream(a, b, stationary="input", block=block, interpret=interpret)
+def matmul_is(a, b, *, block=DEFAULT_BLOCK, interpret=False, **epilogue):
+    return _matmul_stream(a, b, stationary="input", block=block,
+                          interpret=interpret, **epilogue)
 
 
 KERNELS = {
@@ -190,3 +325,28 @@ def matmul(
 ) -> jax.Array:
     """Flex matmul: same math, dataflow-selected block schedule."""
     return KERNELS[dataflow](a, b, block=block, interpret=interpret)
+
+
+def fused_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    dataflow: Dataflow = Dataflow.OS,
+    *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    activation: str | None = None,
+    out_dtype: jnp.dtype | None = None,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Matmul with the epilogue fused into the kernel's final flush.
+
+    ``bias`` must be (1, N); ``residual`` (M, N); all dims block multiples
+    (ops.flex_linear pads).  ``activation`` in {relu, gelu, silu, None}.
+    """
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    return KERNELS[dataflow](
+        a, b, bias=bias, residual=residual, activation=activation,
+        out_dtype=out_dtype, block=block, interpret=interpret,
+    )

@@ -1,9 +1,16 @@
 """jit'd public wrappers around the flex dataflow kernels.
 
-``flex_matmul`` is the op the model stack calls: it pads to block multiples,
-dispatches to the CMU-selected dataflow kernel, and falls back to plain XLA
-``jnp.dot`` when the kernel path is disabled (CPU dry-runs / compile-only
-meshes, where XLA must see a fusible dot for cost_analysis).
+``flex_linear`` is the op the model stack calls: a full linear layer —
+``act(x @ w + b) + residual`` — with the epilogue fused into the Pallas
+kernel's final flush, so bias/activation/residual never re-stream the matmul
+output through HBM.  It pads to block multiples, dispatches to the
+CMU-selected dataflow kernel, and unpads.
+
+``flex_matmul`` is the bare-matmul variant kept for benchmarks and the
+paper-claims suite; ``auto_matmul`` adds trace-time CMU dataflow selection.
+The model stack falls back to plain XLA einsum when the kernel path is
+disabled (CPU dry-runs / compile-only meshes, where XLA must see a fusible
+dot for cost_analysis).
 """
 
 from __future__ import annotations
@@ -26,6 +33,23 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
     return x
 
 
+def default_interpret() -> bool:
+    """Pallas kernels need interpret mode off-TPU (CPU CI, dry-runs)."""
+    return jax.default_backend() != "tpu"
+
+
+def _fit_block(M: int, K: int, N: int, block: tuple[int, int, int]):
+    """Shrink each block dim to the padded extent of its GEMM dim — a block
+    larger than the (128-aligned) dim just wastes VMEM — while honouring
+    CMU-tuned blocks above 128."""
+
+    def fit(d: int, bd: int) -> int:
+        return min(bd, _round_up_dim(d))
+
+    bm, bk, bn = block
+    return fit(M, bm), fit(K, bk), fit(N, bn)
+
+
 @functools.partial(
     jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype")
 )
@@ -42,8 +66,7 @@ def flex_matmul(
     K2, N = b.shape
     if K != K2:
         raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
-    bm, bk, bn = block
-    bm, bk, bn = min(bm, _round_up(M)), min(bk, _round_up(K)), min(bn, _round_up(N))
+    bm, bk, bn = _fit_block(M, K, N, block)
     ap = _pad_to(a, bm, bk)
     bp = _pad_to(b, bk, bn)
     out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret)
@@ -51,10 +74,53 @@ def flex_matmul(
     return out.astype(out_dtype or jnp.promote_types(a.dtype, b.dtype))
 
 
-def _round_up(d: int, mult: int = 128) -> int:
-    """Smallest MXU-aligned block covering d (min 8 sublanes for tiny dims)."""
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "dataflow", "block", "interpret", "out_dtype"),
+)
+def flex_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
+    dataflow: Dataflow = Dataflow.OS,
+    block: tuple[int, int, int] = fk.DEFAULT_BLOCK,
+    interpret: bool = False,
+    out_dtype: jnp.dtype | None = None,
+) -> jax.Array:
+    """Fused linear layer: ``act(x @ w + b) + residual`` in one kernel pass.
+
+    x (M, K); w (K, N); b (N,) or None; residual (M, N) or None;
+    ``activation`` in {relu, gelu, silu, None}.  Bias/activation/residual and
+    the output cast all run inside the kernel's final flush while the f32
+    accumulator block is resident in VMEM — no extra HBM round-trips.
+    Pads/unpads to block multiples (zero padding is epilogue-safe: the padded
+    rows/cols are sliced off before any consumer sees them).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    bm, bk, bn = _fit_block(M, K, N, block)
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    bp = None if b is None else _pad_to(b.reshape(1, N), 1, bn)
+    rp = None if residual is None else _pad_to(residual, bm, bn)
+    odt = out_dtype or jnp.promote_types(x.dtype, w.dtype)
+    out = fk.fused_matmul(
+        xp, wp, dataflow,
+        bias=bp, residual=rp, activation=activation, out_dtype=odt,
+        block=(bm, bk, bn), interpret=interpret,
+    )
+    return out[:M, :N].astype(odt)
+
+
+def _round_up_dim(d: int, mult: int = 128) -> int:
+    """Smallest MXU-aligned extent covering d (min 8 sublanes for tiny dims)."""
     if d >= mult:
-        return mult
+        return -(-d // mult) * mult
     r = 8
     while r < d:
         r *= 2

@@ -31,6 +31,29 @@ def blocked_matmul_ref(
     return out
 
 
+def linear_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Unfused oracle for ``ops.flex_linear``: matmul, bias, activation and
+    residual as separate f32 ops (what XLA runs when fusion is off)."""
+    from repro.kernels.flex_matmul import ACTIVATIONS
+
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(out_dtype or jnp.promote_types(x.dtype, w.dtype))
+
+
 def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
     """Plain softmax attention oracle. q (B,S,H,hd); k/v (B,Skv,Hkv,hd) GQA."""
     import math

@@ -204,6 +204,8 @@ def lower_cell(
                 if v is not None:
                     rec[f"mem_{k}"] = int(v)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax < 0.5: one dict per device
+            cost = cost[0] if cost else None
         if cost:
             rec["hlo_flops"] = float(cost.get("flops", 0.0))
             rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))

@@ -8,6 +8,16 @@ from __future__ import annotations
 
 import jax
 
+# jax promoted shard_map out of experimental at 0.5; the pinned 0.4.x only
+# has the experimental spelling.  Every caller (models, runtime, tests)
+# imports this compat name instead of touching jax.shard_map directly.
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["dp_axes", "dp_size", "make_mesh", "make_production_mesh", "shard_map"]
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; the multi-pod mesh adds a leading DCN 'pod' axis."""

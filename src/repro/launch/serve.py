@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import make_decode_step, make_prefill_step, setup_plan_cache
 from repro.models import Model, get_config
 
 
@@ -26,9 +26,16 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan-cache", default="",
+                    help="CMU plan JSON: reload if present, else autotune + save")
+    ap.add_argument("--pallas", action="store_true",
+                    help="dispatch projections to the fused flex kernels")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.pallas:
+        cfg = cfg.replace(use_pallas=True)
+    setup_plan_cache(args.plan_cache, cfg, args.requests * args.prompt_len)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prefill = jax.jit(make_prefill_step(model, cache_len=args.cache_len))

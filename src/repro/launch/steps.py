@@ -3,8 +3,7 @@ the real training driver, and the serving driver."""
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +108,32 @@ def make_decode_step(model: Model) -> Callable:
         return model.decode_step(params, cache, token)
 
     return decode
+
+
+def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True):
+    """Program the CMU for a serve/train run.
+
+    Loads the persisted ``DataflowPlan`` from ``path`` when it exists;
+    otherwise runs the measured autotune over the config's GEMMs and saves
+    the winner to ``path`` so the next launch skips tuning.  The activated
+    plan drives every ``models.layers.linear`` dispatch when the config runs
+    with ``use_pallas``.  Returns the plan (or None when no path given).
+    """
+    if not path:
+        return None
+    import logging
+
+    from repro.core import activate_plan, load_or_autotune, model_gemms
+
+    gemms = model_gemms(cfg, tokens)
+    plan, loaded = load_or_autotune(path, gemms, measure=measure)
+    activate_plan(plan)
+    src = "loaded" if loaded else "autotuned"
+    logging.getLogger(__name__).info(
+        "plan cache %s: %s (%d layers, histogram %s)",
+        src, path, len(plan.layers), plan.histogram(),
+    )
+    return plan
 
 
 def init_train_state(model: Model, key, quantize_opt: bool = False):

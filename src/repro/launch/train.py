@@ -24,6 +24,7 @@ from repro.launch.steps import (
     init_train_state,
     make_train_step,
     microbatches_for,
+    setup_plan_cache,
     use_quantized_opt,
 )
 from repro.models import Model, get_config
@@ -45,7 +46,18 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, default=-1, help="inject a node failure")
     ap.add_argument("--d-model", type=int, default=0, help="override width")
     ap.add_argument("--layers", type=int, default=0, help="override depth")
+    ap.add_argument("--plan-cache", default="",
+                    help="CMU plan JSON: reload if present, else autotune + save")
+    ap.add_argument("--pallas", action="store_true",
+                    help="dispatch projections to the fused flex kernels "
+                         "(inference-only until the kernels grow a custom VJP)")
     args = ap.parse_args()
+    if args.pallas:
+        # pallas_call has no autodiff rule on the pinned jax; grad through the
+        # fused kernels dies deep in tracing.  Fail fast with the real reason.
+        ap.error("--pallas is inference-only for now (the fused kernels have "
+                 "no custom VJP yet — see ROADMAP); train still uses the "
+                 "autotuned --plan-cache for the XLA path")
 
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -53,6 +65,7 @@ def main() -> None:
         cfg = cfg.replace(d_model=args.d_model)
     if args.layers:
         cfg = cfg.replace(num_layers=args.layers)
+    setup_plan_cache(args.plan_cache, cfg, args.global_batch * args.seq)
     model = Model(cfg)
     total, active = cfg.param_count()
     print(f"arch={cfg.name} params={total/1e6:.1f}M (active {active/1e6:.1f}M)")

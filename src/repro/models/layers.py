@@ -3,8 +3,10 @@
 Everything is functional: ``params`` are nested dicts of arrays, layers are
 pure functions of (params, x).  Activation sharding uses logical axes
 (`sharding.constrain`), a no-op outside a mesh context.  Dense projections
-route through ``_dot`` which can dispatch to the Pallas flex kernels
-(config.use_pallas) or plain XLA einsum (dry-run path).
+route through ``linear`` which dispatches to the fused Pallas flex kernels
+(config.use_pallas: bias/activation/residual fused into the kernel flush,
+dataflow + block per the active CMU plan) or plain XLA einsum (dry-run
+path, where XLA must see a fusible dot for cost_analysis).
 """
 
 from __future__ import annotations
@@ -19,6 +21,59 @@ from repro.models.config import ModelConfig
 from repro.models.sharding import constrain
 
 Params = dict[str, Any]
+
+_XLA_ACT = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu}
+
+
+def linear(
+    cfg: ModelConfig,
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
+    name: str = "",
+) -> jax.Array:
+    """``act(x @ w + b) + residual`` for (..., K) @ (K, N).
+
+    With ``cfg.use_pallas`` this is one fused flex-kernel launch: the CMU
+    plan (``core.plan_cache.active_plan``) supplies (dataflow, block) for
+    ``name``; unplanned layers fall back to the trace-time roofline argmin.
+    Otherwise plain XLA ops (einsum + separate epilogue), the dry-run path.
+    """
+    w = w.astype(x.dtype)
+    if cfg.use_pallas:
+        from repro.core.dataflow import GemmShape, best_kernel_dataflow
+        from repro.core.plan_cache import active_plan
+        from repro.kernels.flex_matmul import DEFAULT_BLOCK
+        from repro.kernels.ops import default_interpret, flex_linear
+
+        lead = x.shape[:-1]
+        K, N = w.shape
+        x2 = x.reshape(-1, K)
+        r2 = None if residual is None else residual.reshape(-1, N)
+        plan = active_plan()
+        lp = plan.get(name) if (plan is not None and name) else None
+        if lp is not None:
+            df, blk = lp.dataflow, lp.block or DEFAULT_BLOCK
+        else:
+            df, _ = best_kernel_dataflow(GemmShape(x2.shape[0], K, N, name=name))
+            blk = DEFAULT_BLOCK
+        out = flex_linear(
+            x2, w, None if b is None else b.astype(x.dtype),
+            activation=activation, residual=r2, dataflow=df, block=blk,
+            interpret=default_interpret(), out_dtype=x.dtype,
+        )
+        return out.reshape(*lead, N)
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    if activation is not None:
+        y = _XLA_ACT[activation](y)
+    if residual is not None:
+        y = y + residual
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -122,11 +177,9 @@ def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array, xkv: jax.Array | Non
     B, S, _ = x.shape
     xkv = x if xkv is None else xkv
     Skv = xkv.shape[1]
-    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dq->bsq", xkv, p["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dq->bsq", xkv, p["wv"].astype(x.dtype))
-    if cfg.qkv_bias:
-        q, k, v = q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype), v + p["bv"].astype(x.dtype)
+    q = linear(cfg, x, p["wq"], p.get("bq"), name="attn.wq")
+    k = linear(cfg, xkv, p["wk"], p.get("bk"), name="attn.wk")
+    v = linear(cfg, xkv, p["wv"], p.get("bv"), name="attn.wv")
     # Attention is context-parallel (seq-sharded q under shard_map), so the
     # flat projections stay SEQ-sharded and heads are never split — this is
     # head-count agnostic (56 or 8 heads on a 16-way axis both just work) and
@@ -312,6 +365,7 @@ def attention_full(
     xkv: jax.Array | None = None,
     use_rope: bool = True,
     positions: jax.Array | None = None,
+    residual: jax.Array | None = None,
 ) -> jax.Array:
     """Full-sequence attention (train / prefill): context-parallel shard_map.
 
@@ -351,15 +405,17 @@ def attention_full(
             idx = jax.lax.axis_index(seq_axes)
             return _attention_core(cfg, q_l, k_l, v_l, q_offset=idx * Sloc, **core)
 
-        o = jax.shard_map(
+        from repro.launch.mesh import shard_map
+
+        o = shard_map(
             local_fn, mesh=mesh,
             in_specs=(q_spec, kv_spec, kv_spec),
             out_specs=q_spec,
         )(q, k, v)
 
     o = constrain(o, "act_batch", "act_seq", None, None)
-    out = jnp.einsum("bshd,hdD->bsD", o, p["wo"].astype(x.dtype).reshape(cfg.num_heads, cfg.head_dim, D))
-    return out
+    return linear(cfg, o.reshape(B, S, cfg.q_dim), p["wo"],
+                  residual=residual, name="attn.wo")
 
 
 def _decode_core(q, k, v, kpos, pos, window: int, scale: float, axis: str | None):
@@ -434,14 +490,16 @@ def attention_decode(
             kpos = idx * Sloc + jnp.arange(Sloc)
             return _decode_core(q_l, k_l, v_l, kpos, pos_l, window, scale, seq_ax)
 
-        o = jax.shard_map(
+        from repro.launch.mesh import shard_map
+
+        o = shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(dp, None, None, None), P(dp, seq_ax, None, None),
                       P(dp, seq_ax, None, None), P()),
             out_specs=P(dp, None, None, None),
         )(q, k, v, pos)
 
-    out = jnp.einsum("bshd,hdD->bsD", o, p["wo"].astype(x.dtype).reshape(cfg.num_heads, cfg.head_dim, D))
+    out = linear(cfg, o.reshape(B, 1, cfg.q_dim), p["wo"], name="attn.wo")
     return out, {"k": k, "v": v}
 
 
@@ -465,19 +523,25 @@ def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
     return p
 
 
-def mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+def mlp(
+    cfg: ModelConfig, p: Params, x: jax.Array, residual: jax.Array | None = None
+) -> jax.Array:
     """Sequence-parallel FFN: the hidden stays SEQ-sharded (weights are
     gathered instead — the IS mesh dataflow).  Sharding the hidden on the
     feature dim would force a per-layer seq all-gather of x, which §Perf C3
-    measured at ~70% of qwen3-train's entire collective term."""
-    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
-    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    measured at ~70% of qwen3-train's entire collective term.
+
+    The activation fuses into the w1 kernel and ``residual`` into the w2
+    kernel on the pallas path, so the hidden/output never re-stream through
+    HBM for the epilogue."""
+    act = "silu" if cfg.activation == "silu" else "gelu"
     if "w3" in p:
-        h = act(h) * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+        h = linear(cfg, x, p["w1"], activation=act, name="mlp.w1")
+        h = h * linear(cfg, x, p["w3"], name="mlp.w3")
     else:
-        h = act(h)
+        h = linear(cfg, x, p["w1"], activation=act, name="mlp.w1")
     h = constrain(h, "act_batch", "act_seq", None)
-    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+    return linear(cfg, h, p["w2"], residual=residual, name="mlp.w2")
 
 
 # ---------------------------------------------------------------------------

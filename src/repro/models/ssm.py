@@ -16,7 +16,6 @@ models skip.
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

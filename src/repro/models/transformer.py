@@ -10,7 +10,6 @@ pair of axes.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -65,18 +64,23 @@ def init_block(cfg: ModelConfig, key) -> Params:
 def block_apply(
     cfg: ModelConfig, p: Params, x: jax.Array, window: int, prefix_len: int = 0
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    # With unit residual scale the residual adds fuse into the wo / w2
+    # projection kernels (pallas path) instead of separate XLA adds.
+    fuse_res = cfg.residual_scale == 1.0
     h = Lyr.norm(cfg, p["ln1"], x)
-    h = Lyr.attention_full(cfg, p["attn"], h, window=window, prefix_len=prefix_len)
-    x = x + cfg.residual_scale * h
+    h = Lyr.attention_full(cfg, p["attn"], h, window=window, prefix_len=prefix_len,
+                           residual=x if fuse_res else None)
+    x = h if fuse_res else x + cfg.residual_scale * h
     h = Lyr.norm(cfg, p["ln2"], x)
     aux = {"load_balance": jnp.zeros((), jnp.float32), "router_z": jnp.zeros((), jnp.float32)}
     if "moe" in p:
         mo, aux = Lyr.moe(cfg, p["moe"], h)
         if "mlp" in p:
             mo = mo + Lyr.mlp(cfg, p["mlp"], h)
+        x = x + cfg.residual_scale * mo
     else:
-        mo = Lyr.mlp(cfg, p["mlp"], h)
-    x = x + cfg.residual_scale * mo
+        mo = Lyr.mlp(cfg, p["mlp"], h, residual=x if fuse_res else None)
+        x = mo if fuse_res else x + cfg.residual_scale * mo
     x = constrain(x, "act_batch", "act_seq", "act_embed")
     return x, aux
 
@@ -200,7 +204,7 @@ class Model:
         wout = params.get("lm_head")
         if wout is None:
             wout = params["embed"].T / max(cfg.emb_scale, 1.0)
-        logits = jnp.einsum("bsd,dv->bsv", h, wout.astype(h.dtype)).astype(jnp.float32)
+        logits = Lyr.linear(cfg, h, wout, name="lm_head").astype(jnp.float32)
         if cfg.logit_softcap:
             logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
         # vocab (not seq) carries the 'model' axis here — the two must not collide

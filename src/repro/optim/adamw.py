@@ -11,7 +11,7 @@ an error-feedback-free scheme adequate at these block sizes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint

@@ -11,7 +11,6 @@ fed from host heartbeat timestamps.
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
 
 import numpy as np
 

@@ -1,0 +1,100 @@
+"""Property-testing shim: real hypothesis when installed, else a small
+deterministic example grid.
+
+The test suite uses a narrow slice of the hypothesis API — ``given``,
+``settings``, ``st.integers``, ``st.sampled_from``, ``st.booleans``.  In
+offline environments where hypothesis can't be installed, this module
+provides drop-in replacements that expand each ``@given`` into a fixed,
+deterministic set of examples: the strategy's boundary values first, then
+seeded-PRNG interior draws (seeded per test name, so failures reproduce).
+
+Usage in test modules (replaces ``from hypothesis import given, settings``
+and ``import hypothesis.strategies as st``):
+
+    from _propcheck import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline fallback
+    import functools
+    import inspect
+    import os
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    # Examples per @given in fallback mode.  Enough to cover boundaries plus
+    # a few interior points without turning interpret-mode kernel sweeps
+    # into minutes; raise via env for a more thorough local run.
+    _DEFAULT_EXAMPLES = int(os.environ.get("PROPCHECK_EXAMPLES", "8"))
+
+    class _Strategy:
+        """A value source: boundary examples + seeded random draws."""
+
+        def __init__(self, boundary, draw):
+            self._boundary = list(boundary)
+            self._draw = draw
+
+        def examples(self, rng: random.Random, n: int) -> list:
+            out = self._boundary[:n]
+            while len(out) < n:
+                out.append(self._draw(rng))
+            return out
+
+    class st:  # noqa: N801 — mimics the hypothesis.strategies module name
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            lo, hi = int(min_value), int(max_value)
+            mid = (lo + hi) // 2
+            return _Strategy([lo, hi, mid], lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(elems, lambda rng: rng.choice(elems))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+    def settings(max_examples: int | None = None, deadline=None, **_kw):
+        """Records the example budget for the enclosing @given."""
+
+        def deco(fn):
+            fn._propcheck_settings = {"max_examples": max_examples}
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*wargs, **wkw):
+                cfg = getattr(wrapper, "_propcheck_settings", None) or getattr(
+                    fn, "_propcheck_settings", {}
+                )
+                n = min(
+                    cfg.get("max_examples") or _DEFAULT_EXAMPLES, _DEFAULT_EXAMPLES
+                )
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                pos_grids = [s.examples(rng, n) for s in arg_strategies]
+                kw_grids = {k: s.examples(rng, n) for k, s in kw_strategies.items()}
+                for i in range(n):
+                    pos = [g[i] for g in pos_grids]
+                    kws = {k: g[i] for k, g in kw_grids.items()}
+                    fn(*wargs, *pos, **kws, **wkw)
+
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (real hypothesis does the same)
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

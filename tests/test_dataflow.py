@@ -1,8 +1,6 @@
 """Unit + property tests for the core dataflow cost models."""
 
-import hypothesis.strategies as st
-import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core import (
     ALL_DATAFLOWS,
@@ -22,7 +20,6 @@ from repro.core import (
 dims = st.integers(min_value=1, max_value=2048)
 arr = st.sampled_from([8, 16, 32, 64, 128])
 
-
 @given(M=dims, K=dims, N=dims, S=arr)
 @settings(max_examples=200, deadline=None)
 def test_cycles_positive_and_monotone_in_work(M, K, N, S):
@@ -33,14 +30,12 @@ def test_cycles_positive_and_monotone_in_work(M, K, N, S):
         g2 = GemmShape(M * 2, K, N)
         assert systolic_cycles(g2, df, S, S) >= c
 
-
 @given(M=dims, K=dims, N=dims, S=arr)
 @settings(max_examples=200, deadline=None)
 def test_best_dataflow_is_argmin(M, K, N, S):
     g = GemmShape(M, K, N)
     df, c = best_dataflow(g, S, S)
     assert c == min(systolic_cycles(g, d, S, S) for d in ALL_DATAFLOWS)
-
 
 @given(M=st.integers(1, 96), K=st.integers(1, 96), N=st.integers(1, 96),
        r=st.sampled_from([4, 8, 16]), c=st.sampled_from([4, 8, 16]))
@@ -55,7 +50,6 @@ def test_exact_os_simulation_bounds_closed_form(M, K, N, r, c):
     if M % r == 0 and N % c == 0:
         assert exact == closed
 
-
 def test_dataflow_asymptotics():
     """WS wins for tall GEMMs (M huge), IS for wide-K, OS for K-dominant."""
     S = 32
@@ -64,7 +58,6 @@ def test_dataflow_asymptotics():
     deep = GemmShape(M=32, K=100_000, N=32)
     # K-huge: OS streams K with one fold; IS folds over K
     assert best_dataflow(deep, S, S)[0] is Dataflow.OS
-
 
 @given(M=dims, K=dims, N=dims)
 @settings(max_examples=100, deadline=None)
@@ -76,7 +69,6 @@ def test_hbm_traffic_lower_bound(M, K, N):
         cost = hbm_traffic_bytes(g, df, 512, 512, 512)
         assert cost.hbm_bytes >= floor * 0.999
 
-
 @given(M=dims, K=dims, N=dims)
 @settings(max_examples=100, deadline=None)
 def test_single_block_gemm_all_dataflows_tie(M, K, N):
@@ -85,7 +77,6 @@ def test_single_block_gemm_all_dataflows_tie(M, K, N):
     b = 2048
     costs = {df: hbm_traffic_bytes(g, df, b, b, b).hbm_bytes for df in ALL_DATAFLOWS}
     assert len(set(costs.values())) == 1
-
 
 def test_kernel_dataflow_shape_dependence():
     """The CMU picks different dataflows for different layer shapes —
@@ -102,7 +93,6 @@ def test_kernel_dataflow_shape_dependence():
         got, _ = best_kernel_dataflow(g, bm, bk, bn)
         assert got is want, (g, got, want)
 
-
 def test_tuned_cmu_matches_paper_narrative():
     """Block-shape-co-tuned CMU: train GEMMs pin weights (WS), decode GEMMs
     pin inputs (IS) — the paper's per-layer heterogeneity at the VMEM level."""
@@ -112,7 +102,6 @@ def test_tuned_cmu_matches_paper_narrative():
     df_dec, blk_d, _ = tune_kernel_dataflow(GemmShape(128, 2560, 9728))
     assert df_train is Dataflow.WS and blk_t[1] >= 2560  # bk >= K: no partials
     assert df_dec is Dataflow.IS and blk_d[1] >= 2560
-
 
 def test_tuned_cmu_never_worse_than_fixed_block():
     from repro.core import hbm_traffic_bytes, tune_kernel_dataflow
@@ -125,7 +114,6 @@ def test_tuned_cmu_never_worse_than_fixed_block():
         )
         assert cost.time_s() <= fixed + 1e-12
 
-
 def test_mesh_dataflow_train_vs_decode():
     """Mesh-level CMU: training (tokens >> weights) prefers weight-gathering
     (IS); decode (tiny activations) prefers weight-stationary TP (WS)."""
@@ -134,7 +122,6 @@ def test_mesh_dataflow_train_vs_decode():
     decode = GemmShape(M=128, K=4096, N=14336)
     assert best_mesh_dataflow(train, tp)[0] is Dataflow.IS
     assert best_mesh_dataflow(decode, tp)[0] is Dataflow.WS
-
 
 @given(M=dims, K=dims, N=dims)
 @settings(max_examples=50, deadline=None)
@@ -145,7 +132,6 @@ def test_mesh_costs_positive(M, K, N):
         assert c.comm_bytes >= 0 and c.flops_per_chip >= 0
         assert g.flops > 0
         assert c.time_s(overlap=1.0) <= c.time_s(overlap=0.0) + 1e-12
-
 
 def test_utilization_and_intensity():
     g = GemmShape(4096, 4096, 4096)

@@ -2,13 +2,16 @@
 count (jax pins the device count at first init, so the main pytest process
 stays single-device)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+# every test here boots a fresh jax in a subprocess (~30s+ each); keep them
+# out of the CI fast lane (-m "not slow")
+pytestmark = pytest.mark.slow
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -115,6 +118,7 @@ def test_compressed_psum_multidevice():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import shard_map
         from repro.runtime import compressed_psum
 
         mesh = jax.make_mesh((4,), ('x',))
@@ -124,7 +128,7 @@ def test_compressed_psum_multidevice():
             out, _ = compressed_psum(g[0], 'x')
             return out[None]
 
-        out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P('x'),), out_specs=P('x')))(gs)
+        out = jax.jit(shard_map(f, mesh=mesh, in_specs=(P('x'),), out_specs=P('x')))(gs)
         want = jnp.mean(gs, axis=0)
         err = float(jnp.abs(out[0] - want).max()) / (float(jnp.abs(want).max()) + 1e-9)
         assert err < 0.05, err

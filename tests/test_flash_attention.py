@@ -1,16 +1,13 @@
 """Pallas flash-attention kernel vs the jnp oracle (interpret=True)."""
 
-import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
-from repro.kernels import attention_ref, flash_attention, mha_flash
+from repro.kernels import attention_ref, mha_flash
 
 RNG = np.random.default_rng(3)
-
 
 def _qkv(B, S, H, Hkv, hd, dtype=jnp.float32, skv=None):
     skv = skv or S
@@ -18,7 +15,6 @@ def _qkv(B, S, H, Hkv, hd, dtype=jnp.float32, skv=None):
     k = jnp.asarray(RNG.normal(size=(B, skv, Hkv, hd)), dtype)
     v = jnp.asarray(RNG.normal(size=(B, skv, Hkv, hd)), dtype)
     return q, k, v
-
 
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("shape", [(2, 256, 4, 2, 64), (1, 128, 8, 8, 128), (2, 384, 6, 1, 128)])
@@ -29,7 +25,6 @@ def test_flash_matches_oracle(shape, causal):
     ref = attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
 
-
 def test_flash_bf16():
     q, k, v = _qkv(2, 256, 4, 2, 64, jnp.bfloat16)
     out = mha_flash(q, k, v, interpret=True)
@@ -38,13 +33,11 @@ def test_flash_bf16():
         np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=0.05, rtol=0.05
     )
 
-
 def test_flash_cross_attention_longer_kv():
     q, k, v = _qkv(1, 128, 4, 4, 64, skv=384)
     out = mha_flash(q, k, v, causal=False, interpret=True)
     ref = attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
-
 
 @given(
     bq=st.sampled_from([64, 128]),
@@ -58,7 +51,6 @@ def test_flash_block_shape_invariance(bq, bk, causal):
     out = mha_flash(q, k, v, causal=causal, interpret=True, block_q=bq, block_k=bk)
     ref = attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
-
 
 def test_flash_agrees_with_model_attention_core():
     """Kernel == the framework's jnp online-softmax path."""

@@ -5,12 +5,10 @@ drives random rectangular shapes including non-block-multiples (the ops.py
 wrapper pads).
 """
 
-import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core import ALL_DATAFLOWS, Dataflow, GemmShape, best_kernel_dataflow
 from repro.kernels import (
@@ -24,11 +22,9 @@ from repro.kernels import (
 
 RNG = np.random.default_rng(42)
 
-
 def _rand(shape, dtype):
     x = RNG.normal(size=shape).astype(np.float32)
     return jnp.asarray(x, dtype)
-
 
 SHAPES = [
     (128, 128, 128),
@@ -37,7 +33,6 @@ SHAPES = [
     (512, 128, 384),
     (384, 384, 384),
 ]
-
 
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("df", ALL_DATAFLOWS)
@@ -52,7 +47,6 @@ def test_kernel_matches_oracle(shape, df, dtype):
         np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
     )
 
-
 @pytest.mark.parametrize("df", ALL_DATAFLOWS)
 def test_raw_kernels_divisible_shapes(df):
     fn = {Dataflow.OS: matmul_os, Dataflow.WS: matmul_ws, Dataflow.IS: matmul_is}[df]
@@ -61,7 +55,6 @@ def test_raw_kernels_divisible_shapes(df):
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(matmul_ref(a, b)), atol=1e-4, rtol=1e-4
     )
-
 
 @given(
     M=st.integers(1, 300),
@@ -77,7 +70,6 @@ def test_padded_arbitrary_shapes(M, K, N, df):
         np.asarray(out), np.asarray(matmul_ref(a, b)), atol=1e-3, rtol=1e-3
     )
 
-
 def test_all_dataflows_bitwise_equal_f32():
     """Same math, same accumulation order over k-blocks -> identical results."""
     a, b = _rand((256, 256), jnp.float32), _rand((256, 256), jnp.float32)
@@ -88,7 +80,6 @@ def test_all_dataflows_bitwise_equal_f32():
     np.testing.assert_array_equal(outs[0], outs[1])
     np.testing.assert_array_equal(outs[0], outs[2])
 
-
 def test_blocked_oracle_agrees():
     a, b = _rand((256, 384), jnp.float32), _rand((384, 128), jnp.float32)
     np.testing.assert_allclose(
@@ -96,7 +87,6 @@ def test_blocked_oracle_agrees():
         np.asarray(matmul_ref(a, b)),
         atol=1e-4, rtol=1e-4,
     )
-
 
 def test_cmu_dispatch_is_shape_static():
     """auto_matmul picks the same dataflow the CMU cost model picks."""

@@ -1,16 +1,14 @@
 """Chunked linear-attention (Mamba2 / RWKV-6) vs exact sequential recurrence."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.models import ssm as S
 
 RNG = np.random.default_rng(7)
-
 
 def _seq_ref(r, k, v, lw, post, u=None):
     B, T, H, N = r.shape
@@ -24,7 +22,6 @@ def _seq_ref(r, k, v, lw, post, u=None):
         outs.append(o)
     return jnp.stack(outs, 1), St
 
-
 def _inputs(B, T, H, N, M, seed=0):
     rng = np.random.default_rng(seed)
     r = jnp.asarray(rng.normal(size=(B, T, H, N)), jnp.float32)
@@ -35,7 +32,6 @@ def _inputs(B, T, H, N, M, seed=0):
         S.LOG_DECAY_MIN, -1e-6,
     )
     return r, k, v, lw
-
 
 @pytest.mark.parametrize("post", [True, False])
 @pytest.mark.parametrize("T", [16, 32, 48])
@@ -48,7 +44,6 @@ def test_chunked_equals_recurrent(post, T):
     np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_r), atol=2e-4, rtol=2e-4)
     np.testing.assert_allclose(np.asarray(S_c), np.asarray(S_r), atol=2e-4, rtol=2e-4)
 
-
 @given(seed=st.integers(0, 10_000), post=st.booleans())
 @settings(max_examples=20, deadline=None)
 def test_chunked_equals_recurrent_property(seed, post):
@@ -57,7 +52,6 @@ def test_chunked_equals_recurrent_property(seed, post):
     o_c, S_c = S.chunked_diag_linear_attn(r, k, v, lw, None, post_update=post)
     o_r, S_r = _seq_ref(r, k, v, lw, post, None)
     np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_r), atol=3e-4, rtol=3e-4)
-
 
 def test_state_carried_across_calls():
     """Splitting a sequence across two chunked calls == one call (streaming)."""
@@ -76,7 +70,6 @@ def test_state_carried_across_calls():
     )
     np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full), atol=2e-4, rtol=2e-4)
 
-
 def test_numerical_safety_extreme_decay():
     """All exponents stay bounded at the decay floor — no inf/nan."""
     B, T, H, N, M = 1, 64, 1, 4, 4
@@ -84,7 +77,6 @@ def test_numerical_safety_extreme_decay():
     lw = jnp.full((B, T, H, N), S.LOG_DECAY_MIN)
     o, St = S.chunked_diag_linear_attn(r, k, v, lw, post_update=True)
     assert bool(jnp.all(jnp.isfinite(o))) and bool(jnp.all(jnp.isfinite(St)))
-
 
 def test_causal_conv_state_streaming():
     from repro.models.ssm import _causal_conv1d
@@ -104,7 +96,6 @@ def test_causal_conv_state_streaming():
         np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_full), atol=1e-5, rtol=1e-5
     )
     np.testing.assert_allclose(np.asarray(st), np.asarray(st_full), atol=1e-6)
-
 
 def test_mamba2_block_shapes_and_decode():
     from repro.models.config import ModelConfig

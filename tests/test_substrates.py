@@ -3,18 +3,16 @@
 import os
 import tempfile
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.data import DataConfig, TokenStream
 from repro.optim import adamw_init, adamw_update, cosine, wsd
 from repro.optim.adamw import _dequantize, _quantize
-
 
 def _params():
     return {
@@ -23,13 +21,11 @@ def _params():
         "nested": {"e": jnp.ones((10, 8, 6))},
     }
 
-
 def _grads():
     return jax.tree.map(
         lambda p: jnp.asarray(np.random.default_rng(1).normal(size=p.shape), jnp.float32) * 0.1,
         _params(),
     )
-
 
 def test_adamw_fp32_basic():
     p, g = _params(), _grads()
@@ -37,7 +33,6 @@ def test_adamw_fp32_basic():
     p2, st2 = adamw_update(p, g, st_, 1e-2)
     assert int(st2.step) == 1
     assert all(jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(p2))
-
 
 def test_adamw_int8_close_to_fp32():
     p, g = _params(), _grads()
@@ -48,7 +43,6 @@ def test_adamw_int8_close_to_fp32():
     )
     assert d < 2e-4, d
     assert all(x.dtype == jnp.int8 for x in jax.tree.leaves(sq.m))
-
 
 def test_adamw_int8_multi_step_tracks_fp32():
     """int8-m/bf16-v drift stays a small fraction of actual parameter
@@ -73,7 +67,6 @@ def test_adamw_int8_multi_step_tracks_fp32():
     )
     assert drift < 0.1 * move, (drift, move)
 
-
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=50, deadline=None)
 def test_quantize_roundtrip_bound(seed):
@@ -84,7 +77,6 @@ def test_quantize_roundtrip_bound(seed):
     bound = np.asarray(s).max() * 0.51 + 1e-9
     assert float(jnp.abs(rec - x).max()) <= bound
 
-
 def test_wsd_schedule_shape():
     total, peak, warm = 1000, 1.0, 100
     assert float(wsd(0, total, peak, warm)) < 0.02
@@ -92,14 +84,11 @@ def test_wsd_schedule_shape():
     assert float(wsd(total // 2, total, peak, warm)) == pytest.approx(peak)
     assert float(wsd(total, total, peak, warm)) < 0.01
 
-
 def test_cosine_schedule_monotone_decay():
     vals = [float(cosine(s, 1000, 1.0, warmup=10)) for s in range(10, 1000, 97)]
     assert all(a >= b for a, b in zip(vals, vals[1:]))
 
-
 # ---- checkpoint ------------------------------------------------------------
-
 
 def test_checkpoint_roundtrip_and_latest():
     p = _params()
@@ -112,7 +101,6 @@ def test_checkpoint_roundtrip_and_latest():
         np.testing.assert_array_equal(np.asarray(loaded["w"]), np.asarray(p["w"]))
         assert extra["rng"] == 7
 
-
 def test_checkpoint_atomic_commit():
     """A partially-written (tmp) checkpoint is never visible."""
     p = _params()
@@ -120,7 +108,6 @@ def test_checkpoint_atomic_commit():
         os.makedirs(os.path.join(d, ".tmp_step_99"))  # simulated crash debris
         save_checkpoint(d, 5, p)
         assert latest_step(d) == 5
-
 
 def test_checkpoint_async():
     import time
@@ -134,9 +121,7 @@ def test_checkpoint_async():
             time.sleep(0.05)
         assert latest_step(d) == 3
 
-
 # ---- data pipeline ---------------------------------------------------------
-
 
 def test_data_deterministic_per_step():
     cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
@@ -145,7 +130,6 @@ def test_data_deterministic_per_step():
     np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
     assert not np.array_equal(s1.batch(18)["tokens"], b1["tokens"])
 
-
 def test_data_shards_disjoint_and_stateless():
     kw = dict(vocab_size=1000, seq_len=16, global_batch=8, seed=0, num_shards=4)
     shards = [TokenStream(DataConfig(shard_id=i, **kw)) for i in range(4)]
@@ -153,13 +137,11 @@ def test_data_shards_disjoint_and_stateless():
     assert all(b.shape == (2, 16) for b in batches)
     assert not np.array_equal(batches[0], batches[1])
 
-
 def test_data_labels_are_shifted_tokens():
     cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
     b = TokenStream(cfg).batch(0)
     assert b["tokens"].shape == b["labels"].shape
     assert (b["labels"] < 100).all() and (b["labels"] >= 0).all()
-
 
 def test_memmap_corpus_roundtrip(tmp_path):
     from repro.data import write_corpus

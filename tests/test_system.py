@@ -6,7 +6,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import DataConfig, TokenStream
 from repro.launch.steps import init_train_state, make_train_step
