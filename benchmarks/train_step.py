@@ -1,0 +1,124 @@
+"""Fwd+bwd microbenchmark: one training step of an MLP block through the
+flex kernels' custom VJP vs the XLA reference path.
+
+Per layer the CMU train plan programs THREE (dataflow, block) decisions —
+forward, dX = dY @ W^T, dW = X^T @ dY — and this benchmark reports all of
+them next to the measured step walltimes.  On CPU the kernels run in Pallas
+interpret mode, so the walltime columns are dispatch sanity checks, not TPU
+performance; the dataflow columns are the paper's point (the backward GEMMs
+transpose the forward aspect ratio and land on different stationarity).
+
+  PYTHONPATH=src python benchmarks/train_step.py [--tokens 256] [--iters 3]
+  PYTHONPATH=src python benchmarks/train_step.py --dry-run   # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GemmShape, autotune_plan
+from repro.kernels import flex_linear, linear_ref
+
+
+def _bwd_spec(sub):
+    return None if sub is None else (sub.dataflow, sub.block)
+
+
+def build_losses(plan, interpret: bool):
+    """(pallas_loss, ref_loss) over a gated-MLP block: w1 -> gelu -> w2 (+res).
+
+    The pallas loss dispatches every GEMM — forward and, via the custom VJP,
+    backward — per the train plan's sub-plans.
+    """
+    by_name = {lp.name: lp for lp in plan.layers}
+
+    def pallas_loss(params, x):
+        h = x
+        for name in ("mlp.w1", "mlp.w2"):
+            lp = by_name[name]
+            w, b = params[name]
+            res = x if name == "mlp.w2" else None
+            act = "gelu" if name == "mlp.w1" else None
+            h = flex_linear(
+                h, w, b, activation=act, residual=res,
+                dataflow=lp.dataflow, block=lp.block, interpret=interpret,
+                bwd_dx=_bwd_spec(lp.bwd_dx), bwd_dw=_bwd_spec(lp.bwd_dw),
+            )
+        return (h * h).mean()
+
+    def ref_loss(params, x):
+        h = x
+        for name in ("mlp.w1", "mlp.w2"):
+            w, b = params[name]
+            res = x if name == "mlp.w2" else None
+            act = "gelu" if name == "mlp.w1" else None
+            h = linear_ref(h, w, b, activation=act, residual=res)
+        return (h * h).mean()
+
+    return pallas_loss, ref_loss
+
+
+def _timeit(fn, *args) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny shapes, 1 iter, grad-correctness assert (CI smoke)")
+    args = ap.parse_args()
+    if args.dry_run:
+        args.tokens, args.d_model, args.d_ff, args.iters = 64, 64, 128, 1
+
+    T, D, F = args.tokens, args.d_model, args.d_ff
+    gemms = [GemmShape(T, D, F, name="mlp.w1"), GemmShape(T, F, D, name="mlp.w2")]
+    plan = autotune_plan(gemms, top_k=2, iters=1, train=True)
+
+    print(f"{'layer':8} {'gemm (M,K,N)':>18} {'fwd':>4} {'dX':>4} {'dW':>4}")
+    for lp in plan.layers:
+        g = lp.gemm
+        print(f"{lp.name:8} {f'({g.M},{g.K},{g.N})':>18} "
+              f"{lp.dataflow.name:>4} {lp.bwd_dx.dataflow.name:>4} "
+              f"{lp.bwd_dw.dataflow.name:>4}")
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(T, D)) * 0.1, jnp.float32)
+    params = {
+        "mlp.w1": (jnp.asarray(rng.normal(size=(D, F)) * 0.05, jnp.float32),
+                   jnp.zeros((F,), jnp.float32)),
+        "mlp.w2": (jnp.asarray(rng.normal(size=(F, D)) * 0.05, jnp.float32),
+                   jnp.zeros((D,), jnp.float32)),
+    }
+
+    pallas_loss, ref_loss = build_losses(plan, interpret=True)
+    pallas_step = jax.jit(jax.value_and_grad(pallas_loss))
+    ref_step = jax.jit(jax.value_and_grad(ref_loss))
+
+    (lp_, gp), (lr, gr) = pallas_step(params, x), ref_step(params, x)
+    np.testing.assert_allclose(float(lp_), float(lr), atol=1e-5, rtol=1e-5)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(gp[k][0]), np.asarray(gr[k][0]),
+                                   atol=2e-4, rtol=2e-4)
+    print("fwd+bwd gradients match the XLA reference")
+
+    tp = min(_timeit(pallas_step, params, x) for _ in range(args.iters))
+    tr = min(_timeit(ref_step, params, x) for _ in range(args.iters))
+    print(f"step walltime: pallas {tp*1e3:8.2f} ms ({T/tp:10,.0f} tok/s)   "
+          f"xla {tr*1e3:8.2f} ms ({T/tr:10,.0f} tok/s)")
+    if args.dry_run:
+        print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

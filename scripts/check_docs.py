@@ -1,0 +1,111 @@
+"""Docs lane: markdown link check + doctest over README/docs snippets.
+
+Checks, for README.md and every docs/*.md file:
+
+  1. every relative markdown link ``[text](target)`` resolves to a real
+     file (anchors and external http(s)/mailto links are skipped);
+  2. every ``>>>`` doctest snippet in the file runs and matches
+     (``python -m doctest`` semantics via doctest.testfile);
+
+and additionally runs the doctests embedded in the public-op docstrings
+(``repro.kernels.ops`` — the ``help(flex_linear)`` examples).
+
+  PYTHONPATH=src python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import doctest
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+# [text](target) — excluding images' srcsets and in-code brackets is handled
+# by only scanning outside fenced code blocks
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+DOCTEST_MODULES = ["repro.kernels.ops"]
+
+
+def md_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        )
+    return files
+
+
+def check_links(path: str) -> list[str]:
+    errors = []
+    in_fence = False
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:  # pure in-page anchor
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel)
+                )
+                if not os.path.exists(resolved):
+                    errors.append(
+                        f"{os.path.relpath(path, ROOT)}:{lineno}: "
+                        f"broken link -> {target}"
+                    )
+    return errors
+
+
+def run_doctests(path: str) -> list[str]:
+    results = doctest.testfile(
+        path, module_relative=False, verbose=False,
+        optionflags=doctest.NORMALIZE_WHITESPACE,
+    )
+    if results.failed:
+        return [f"{os.path.relpath(path, ROOT)}: {results.failed} doctest "
+                f"failure(s) of {results.attempted}"]
+    return []
+
+
+def run_module_doctests(name: str) -> list[str]:
+    import importlib
+
+    mod = importlib.import_module(name)
+    results = doctest.testmod(
+        mod, verbose=False, optionflags=doctest.NORMALIZE_WHITESPACE
+    )
+    if results.failed:
+        return [f"{name}: {results.failed} doctest failure(s) "
+                f"of {results.attempted}"]
+    return []
+
+
+def main() -> int:
+    errors: list[str] = []
+    for path in md_files():
+        errors += check_links(path)
+        errors += run_doctests(path)
+        print(f"checked {os.path.relpath(path, ROOT)}")
+    for name in DOCTEST_MODULES:
+        errors += run_module_doctests(name)
+        print(f"doctested {name}")
+    if errors:
+        print("\n".join(["", "DOCS CHECK FAILED:"] + errors))
+        return 1
+    print("docs check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,10 +19,21 @@ We implement that exact pre-deployment procedure at three levels:
   off most when the selector is driven by measured cost, not a single
   analytical model.
 
-The winning ``DataflowPlan`` (now carrying block shapes) is persisted as JSON
-via ``core.plan_cache`` so serve/train reload plans instead of re-tuning.
-All selection remains one-time, offline, and trace-time static — exactly the
-paper's deployment model (no lax.switch on the hot path).
+**Training plans.**  ``autotune_plan(..., train=True)`` plans the *three*
+GEMMs of each layer as a group — the forward ``C[M,N] = A[M,K] @ B[K,N]``
+plus its two cotangent GEMMs ``dX = dY @ W^T`` ((M,N)x(N,K)) and
+``dW = X^T @ dY`` ((K,M)x(M,N)).  The backward shapes transpose the
+forward's aspect ratio, so they generally want *different* dataflows (e.g.
+a WS-favouring tall fwd GEMM yields an OS-favouring dW) — the paper's
+per-layer reconfiguration argument applied within a single training step.
+The sub-plans land in ``LayerPlan.bwd_dx`` / ``bwd_dw`` and flow through
+``models.layers.linear`` into ``ops.flex_linear``'s custom VJP.
+
+The winning ``DataflowPlan`` (now carrying block shapes and optional
+backward sub-plans) is persisted as JSON via ``core.plan_cache`` so
+serve/train reload plans instead of re-tuning.  All selection remains
+one-time, offline, and trace-time static — exactly the paper's deployment
+model (no lax.switch on the hot path).
 """
 
 from __future__ import annotations
@@ -44,6 +55,37 @@ from .dataflow import (
 
 
 @dataclass(frozen=True)
+class GemmPlan:
+    """One (dataflow, block) decision for a single GEMM — the unit the CMU
+    programs.  Used for the backward sub-plans carried by ``LayerPlan``."""
+
+    dataflow: Dataflow
+    block: tuple[int, int, int] | None
+    est_cost: float
+    source: str = "analytical"  # "analytical" | "measured"
+
+    def to_row(self) -> dict:
+        return {
+            "dataflow": self.dataflow.name,
+            "block": list(self.block) if self.block else None,
+            "est_cost": self.est_cost,
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_row(cls, row: dict | None) -> "GemmPlan | None":
+        if row is None:
+            return None
+        blk = row.get("block")
+        return cls(
+            dataflow=Dataflow[row["dataflow"]],
+            block=tuple(blk) if blk else None,
+            est_cost=row["est_cost"],
+            source=row.get("source", "analytical"),
+        )
+
+
+@dataclass(frozen=True)
 class LayerPlan:
     name: str
     gemm: GemmShape
@@ -51,6 +93,9 @@ class LayerPlan:
     est_cost: float  # cycles (systolic), seconds (roofline), or measured s
     block: tuple[int, int, int] | None = None  # (bm, bk, bn) when co-tuned
     source: str = "analytical"  # "analytical" | "measured"
+    # training sub-plans: the layer's two cotangent GEMMs (None = fwd-only)
+    bwd_dx: GemmPlan | None = None  # dX = dY @ W^T, an (M,N)x(N,K) GEMM
+    bwd_dw: GemmPlan | None = None  # dW = X^T @ dY, a (K,M)x(M,N) GEMM
 
 
 @dataclass
@@ -78,6 +123,13 @@ class DataflowPlan:
             h[l.dataflow.name] += 1
         return h
 
+    def has_bwd(self) -> bool:
+        """True when every layer carries both backward sub-plans — the bar
+        a plan must clear before it can drive ``--pallas`` training."""
+        return bool(self.layers) and all(
+            l.bwd_dx is not None and l.bwd_dw is not None for l in self.layers
+        )
+
     def to_json(self) -> str:
         return json.dumps(
             [
@@ -90,6 +142,8 @@ class DataflowPlan:
                     "est_cost": l.est_cost,
                     "block": list(l.block) if l.block else None,
                     "source": l.source,
+                    "bwd_dx": l.bwd_dx.to_row() if l.bwd_dx else None,
+                    "bwd_dw": l.bwd_dw.to_row() if l.bwd_dw else None,
                 }
                 for l in self.layers
             ],
@@ -110,6 +164,8 @@ class DataflowPlan:
                     est_cost=row["est_cost"],
                     block=tuple(blk) if blk else None,
                     source=row.get("source", "analytical"),
+                    bwd_dx=GemmPlan.from_row(row.get("bwd_dx")),
+                    bwd_dw=GemmPlan.from_row(row.get("bwd_dw")),
                 )
             )
         return plan
@@ -217,6 +273,21 @@ def measure_kernel(
     return best
 
 
+def bwd_gemms(gemm: GemmShape) -> tuple[GemmShape, GemmShape]:
+    """The two cotangent GEMMs of a forward ``C[M,N] = A[M,K] @ B[K,N]``:
+
+      dX = dY @ B^T   — an (M,N)x(N,K) GEMM  (M=M, K=N, N=K)
+      dW = A^T @ dY   — a  (K,M)x(M,N) GEMM  (M=K, K=M, N=N)
+
+    Both transpose the forward's aspect ratio, which is why they generally
+    land on different dataflows than the forward pass.
+    """
+    return (
+        GemmShape(M=gemm.M, K=gemm.N, N=gemm.K, name=gemm.name + ".dx"),
+        GemmShape(M=gemm.K, K=gemm.M, N=gemm.N, name=gemm.name + ".dw"),
+    )
+
+
 def _ranked_candidates(
     gemm: GemmShape, vmem_limit: int
 ) -> list[tuple[float, Dataflow, tuple[int, int, int]]]:
@@ -233,6 +304,35 @@ def _ranked_candidates(
     return ranked
 
 
+def _tune_gemm(
+    gemm: GemmShape,
+    *,
+    vmem_limit: int,
+    top_k: int,
+    measure: bool,
+    iters: int,
+    interpret: bool,
+    epilogue: bool,
+) -> GemmPlan:
+    """Tune one GEMM: analytical pruning, then real-execution timing of the
+    ``top_k`` survivors (falls back to the analytical winner when the GEMM
+    is too large for interpret-mode timing or measurement is off)."""
+    ranked = _ranked_candidates(gemm, vmem_limit)
+    if not ranked:
+        raise ValueError(f"no (dataflow, block) fits VMEM for {gemm}")
+    measurable = measure and not (interpret and gemm.macs > MAX_INTERPRET_MACS)
+    if measurable:
+        timed = [
+            (measure_kernel(gemm, df, blk, iters=iters,
+                            interpret=interpret, epilogue=epilogue), df, blk)
+            for _, df, blk in ranked[:top_k]
+        ]
+        cost, df, blk = min(timed, key=lambda t: t[0])
+        return GemmPlan(dataflow=df, block=blk, est_cost=cost, source="measured")
+    cost, df, blk = ranked[0]
+    return GemmPlan(dataflow=df, block=blk, est_cost=cost, source="analytical")
+
+
 def autotune_plan(
     gemms: list[GemmShape],
     *,
@@ -242,6 +342,7 @@ def autotune_plan(
     iters: int = 2,
     interpret: bool | None = None,
     epilogue: bool = False,
+    train: bool = False,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
@@ -251,33 +352,67 @@ def autotune_plan(
     measurement is disabled (or the GEMM is too large for interpret-mode
     timing on CPU) the analytical winner is kept, marked
     ``source="analytical"`` so callers can tell which decisions were measured.
+
+    With ``train=True`` each layer is planned as a **group of three GEMMs**:
+    the forward plus its two cotangent GEMMs (``bwd_gemms``), each tuned
+    independently (the backward epilogues are bare matmuls, so they are
+    measured without the fused epilogue).  The sub-plans land in
+    ``LayerPlan.bwd_dx`` / ``bwd_dw``.
     """
     if interpret is None:
         from repro.kernels import ops
 
         interpret = ops.default_interpret()
+    kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
+              iters=iters, interpret=interpret)
     plan = DataflowPlan()
     for gemm in gemms:
-        ranked = _ranked_candidates(gemm, vmem_limit)
-        if not ranked:
-            raise ValueError(f"no (dataflow, block) fits VMEM for {gemm}")
-        measurable = measure and not (interpret and gemm.macs > MAX_INTERPRET_MACS)
-        if measurable:
-            timed = [
-                (measure_kernel(gemm, df, blk, iters=iters,
-                                interpret=interpret, epilogue=epilogue), df, blk)
-                for _, df, blk in ranked[:top_k]
-            ]
-            cost, df, blk = min(timed, key=lambda t: t[0])
-            source = "measured"
-        else:
-            cost, df, blk = ranked[0]
-            source = "analytical"
+        fwd = _tune_gemm(gemm, epilogue=epilogue, **kw)
+        dx = dw = None
+        if train:
+            g_dx, g_dw = bwd_gemms(gemm)
+            dx = _tune_gemm(g_dx, epilogue=False, **kw)
+            dw = _tune_gemm(g_dw, epilogue=False, **kw)
         plan.layers.append(
-            LayerPlan(name=gemm.name, gemm=gemm, dataflow=df,
-                      est_cost=cost, block=blk, source=source)
+            LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
+                      est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
+                      bwd_dx=dx, bwd_dw=dw)
         )
     return plan
+
+
+def add_bwd_subplans(
+    plan: DataflowPlan,
+    *,
+    vmem_limit: int = 96 * 1024 * 1024,
+    top_k: int = 3,
+    measure: bool = True,
+    iters: int = 2,
+    interpret: bool | None = None,
+    **_ignored,
+) -> DataflowPlan:
+    """Upgrade a forward-only plan for training **incrementally**: keep every
+    already-tuned forward decision (measurements are expensive) and tune only
+    the missing dX/dW sub-GEMMs.  Layers that already carry both sub-plans
+    are passed through untouched."""
+    import dataclasses
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
+              iters=iters, interpret=interpret, epilogue=False)
+    out = DataflowPlan()
+    for l in plan.layers:
+        if l.bwd_dx is not None and l.bwd_dw is not None:
+            out.layers.append(l)
+            continue
+        g_dx, g_dw = bwd_gemms(l.gemm)
+        out.layers.append(dataclasses.replace(
+            l, bwd_dx=_tune_gemm(g_dx, **kw), bwd_dw=_tune_gemm(g_dw, **kw)
+        ))
+    return out
 
 
 def model_gemms(cfg, tokens: int) -> list[GemmShape]:

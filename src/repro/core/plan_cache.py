@@ -11,6 +11,19 @@ the model stack consults at trace time:
   * ``activate_plan`` / ``active_plan`` — the in-process register file the
     paper's CMU MUX signals map to; ``models.layers.linear`` reads it when
     dispatching each projection to a flex kernel.
+
+Schema versions (see docs/autotune.md for the full JSON shape):
+
+  * v1 — fwd-only rows: (name, M, K, N, dataflow, est_cost, block, source).
+  * v2 — adds per-layer backward sub-plans ``bwd_dx`` / ``bwd_dw`` (each a
+    {dataflow, block, est_cost, source} row, or null for fwd-only plans).
+
+A v1 file still **loads** (its rows are a strict subset of v2; the backward
+sub-plans come back as None) — serving keeps working across the upgrade.
+Training, which needs the sub-plans, passes ``require_bwd=True`` to
+``load_or_autotune`` and a fwd-only cache is then re-tuned and overwritten,
+never silently half-applied.  Files from a *newer* schema than this build
+understands are rejected with a clear re-tune message.
 """
 
 from __future__ import annotations
@@ -18,9 +31,11 @@ from __future__ import annotations
 import json
 import os
 
-from .cmu import DataflowPlan, autotune_plan
+from .cmu import DataflowPlan, add_bwd_subplans, autotune_plan
 
-PLAN_CACHE_VERSION = 1
+PLAN_CACHE_VERSION = 2
+# older schemas this build can still read (v1 rows are a subset of v2 rows)
+COMPATIBLE_VERSIONS = (1, 2)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -45,38 +60,65 @@ def load_plan(path: str) -> DataflowPlan:
             raise ValueError(
                 f"plan cache {path} is not valid JSON ({e}) — delete it and re-tune"
             ) from e
-    if payload.get("version") != PLAN_CACHE_VERSION:
+    version = payload.get("version")
+    if version not in COMPATIBLE_VERSIONS:
         raise ValueError(
-            f"plan cache {path} has version {payload.get('version')}, "
-            f"expected {PLAN_CACHE_VERSION} — delete it and re-tune"
+            f"plan cache {path} has schema version {version}, but this build "
+            f"reads {COMPATIBLE_VERSIONS} — delete it and re-tune (or serve "
+            "with a matching build)"
+        )
+    if version < PLAN_CACHE_VERSION:
+        import logging
+
+        logging.getLogger(__name__).info(
+            "plan cache %s uses schema v%d; loaded as v%d (backward sub-plans "
+            "absent — training will re-tune)", path, version, PLAN_CACHE_VERSION,
         )
     return DataflowPlan.from_json(json.dumps(payload["layers"]))
 
 
-def plan_matches(plan: DataflowPlan, gemms) -> bool:
+def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False) -> bool:
     """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
     the guard against silently applying a cache tuned for another arch or
-    batch geometry."""
+    batch geometry.  With ``require_bwd`` the plan must also carry backward
+    sub-plans for every layer (the training bar)."""
     planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
     wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
-    return planned == wanted
+    if planned != wanted:
+        return False
+    return plan.has_bwd() if require_bwd else True
 
 
-def load_or_autotune(path: str | None, gemms, **autotune_kw):
+def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
+                     **autotune_kw):
     """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
     matches ``gemms``, otherwise a fresh autotune persisted to ``path``
     (when given).  A cache tuned for different GEMM shapes (other arch,
-    other batch geometry) is re-tuned and overwritten, not silently applied."""
+    other batch geometry), or one missing the backward sub-plans a training
+    run needs (``require_bwd``), is re-tuned and overwritten, not silently
+    applied.  A cache whose *forward* decisions match but which lacks the
+    sub-plans is upgraded incrementally (only the dX/dW GEMMs are tuned —
+    the measured forward decisions are kept)."""
     if path and os.path.exists(path):
         plan = load_plan(path)
-        if plan_matches(plan, gemms):
+        if plan_matches(plan, gemms, require_bwd=require_bwd):
             return plan, True
         import logging
 
-        logging.getLogger(__name__).warning(
+        log = logging.getLogger(__name__)
+        if plan_matches(plan, gemms):
+            # fwd decisions are valid — tune only the missing bwd sub-GEMMs
+            log.warning(
+                "plan cache %s lacks backward sub-plans; tuning dX/dW only "
+                "(keeping the forward decisions)", path
+            )
+            plan = add_bwd_subplans(plan, **autotune_kw)
+            save_plan(path, plan)
+            return plan, False
+        log.warning(
             "plan cache %s was tuned for different GEMM shapes; re-tuning", path
         )
-    plan = autotune_plan(gemms, **autotune_kw)
+    plan = autotune_plan(gemms, train=require_bwd, **autotune_kw)
     if path:
         save_plan(path, plan)
     return plan, False

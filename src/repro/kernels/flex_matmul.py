@@ -35,6 +35,28 @@ Fusing the epilogue removes the extra HBM round-trips XLA would otherwise
 spend re-streaming the matmul output through bias/activation/residual ops —
 the on-chip-results argument of Jouppi et al. (2017) applied at VMEM level.
 
+**Training support (fwd/bwd epilogue contract).**  With ``save_preact`` the
+fused kernels additionally emit the f32 pre-activation ``z = a @ b + bias`` —
+the residual ``ops.flex_linear``'s custom VJP needs to differentiate the
+activation.  WS/IS get this for free: their f32 partial-sum staging buffer
+already materialises ``a @ b`` in HBM, so the last-k flush just folds the
+bias in and the staging buffer doubles as the saved pre-activation.  OS pays
+one extra ``(M, N)`` f32 HBM write from the flush (still far cheaper than
+recomputing the forward GEMM in the backward pass).  The backward GEMMs
+themselves (``dX = dY @ W^T``, ``dW = X^T @ dY``) are plain flex matmuls
+issued by ``ops`` under their own CMU-planned (dataflow, block).
+
+**Block-shape constraints.**  Every kernel requires M, K, N to be exact
+multiples of (bm, bk, bn); ``ops.flex_matmul`` / ``ops.flex_linear`` pad and
+unpad around this.  Blocks should be MXU-aligned (multiples of 128, min 8
+sublanes); ``DEFAULT_BLOCK`` is (256, 256, 256).  ``bias`` is (1, N) and
+``residual`` (M, N), blocked (1, bn) / (bm, bn).
+
+**Dtype / accumulator policy.**  Inputs may be any float dtype; every MAC
+accumulates in f32 (``preferred_element_type=jnp.float32``), partial sums
+stream through HBM in f32, the epilogue runs in f32, and only the final
+flush casts to ``out_dtype``.  The saved pre-activation is always f32.
+
 Kernels are written for TPU (MXU-aligned blocks, VMEM scratch) and validated
 on CPU with ``interpret=True`` against ``ref.matmul_ref`` / ``ref.linear_ref``.
 """
@@ -70,15 +92,20 @@ ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
 }
 
 
-def _epilogue(y, bias_ref, res_ref, activation: str | None):
-    """bias -> activation -> residual, all on the resident f32 block."""
+def _epilogue(acc, bias_ref, res_ref, activation: str | None):
+    """bias -> activation -> residual, all on the resident f32 block.
+
+    Returns ``(z, y)``: the pre-activation ``z = acc + bias`` (what the
+    custom VJP saves to differentiate the activation) and the finished
+    ``y = act(z) + residual``.
+    """
+    z = acc
     if bias_ref is not None:
-        y = y + bias_ref[...].astype(jnp.float32)
-    if activation is not None:
-        y = ACTIVATIONS[activation](y)
+        z = z + bias_ref[...].astype(jnp.float32)
+    y = ACTIVATIONS[activation](z) if activation is not None else z
     if res_ref is not None:
         y = y + res_ref[...].astype(jnp.float32)
-    return y
+    return z, y
 
 
 # ---------------------------------------------------------------------------
@@ -86,17 +113,22 @@ def _epilogue(y, bias_ref, res_ref, activation: str | None):
 # ---------------------------------------------------------------------------
 
 
-def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool):
+def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
+               save_preact: bool = False):
     """Output-stationary: accumulate in VMEM scratch across the k grid axis.
 
     The fused epilogue runs in the ``_flush`` branch — the accumulator block
     is still in VMEM, so bias/activation/residual cost zero extra HBM trips.
+    With ``save_preact`` the flush also writes the f32 pre-activation block
+    to a second output (the VJP's saved residual) — one extra HBM write.
     """
     it = iter(refs)
     a_ref, b_ref = next(it), next(it)
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_res else None
-    o_ref, acc_ref = next(it), next(it)
+    o_ref = next(it)
+    z_ref = next(it) if save_preact else None
+    acc_ref = next(it)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -109,12 +141,14 @@ def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool):
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
-        y = _epilogue(acc_ref[...], bias_ref, res_ref, activation)
+        z, y = _epilogue(acc_ref[...], bias_ref, res_ref, activation)
+        if save_preact:
+            z_ref[...] = z
         o_ref[...] = y.astype(o_ref.dtype)
 
 
 def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
-                         has_res: bool, fused: bool):
+                         has_res: bool, fused: bool, save_preact: bool = False):
     """WS/IS shared body: one MAC into the HBM-streamed partial-sum block.
 
     The output block is revisited non-consecutively across the outer k axis,
@@ -130,6 +164,11 @@ def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
     accumulated f32 partial block and writes the finished result once to a
     separate output buffer in the target dtype (partials must stay f32, so
     the low-precision final cast needs its own buffer).
+
+    With ``save_preact`` the flush also folds the bias into the staging
+    buffer, so after the kernel it holds the f32 pre-activation ``z`` — the
+    VJP's saved residual at zero extra HBM cost (the buffer was being
+    written every k step anyway).
     """
     it = iter(refs)
     a_ref, b_ref = next(it), next(it)
@@ -151,7 +190,9 @@ def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
 
         @pl.when(k == pl.num_programs(0) - 1)
         def _flush():
-            y = _epilogue(part_ref[...], bias_ref, res_ref, activation)
+            z, y = _epilogue(part_ref[...], bias_ref, res_ref, activation)
+            if save_preact:
+                part_ref[...] = z
             out_ref[...] = y.astype(out_ref.dtype)
 
 
@@ -190,7 +231,8 @@ def matmul_os(
     out_dtype: jnp.dtype | None = None,
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     interpret: bool = False,
-) -> jax.Array:
+    save_preact: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
@@ -204,8 +246,14 @@ def matmul_os(
     kern = functools.partial(
         _os_kernel, activation=activation,
         has_bias=bias is not None, has_res=residual is not None,
+        save_preact=save_preact,
     )
-    return pl.pallas_call(
+    out_specs = pl.BlockSpec((bm, bn), out_map)
+    out_shape = jax.ShapeDtypeStruct((M, N), out_dtype or jnp.float32)
+    if save_preact:
+        out_specs = [out_specs, pl.BlockSpec((bm, bn), out_map)]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((M, N), jnp.float32)]
+    result = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -213,14 +261,15 @@ def matmul_os(
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
             *extra_specs,
         ],
-        out_specs=pl.BlockSpec((bm, bn), out_map),
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[_VMEM((bm, bn), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(a, b, *extra)
+    return (result[0], result[1]) if save_preact else result
 
 
 def _matmul_stream(
@@ -234,7 +283,8 @@ def _matmul_stream(
     out_dtype: jnp.dtype | None = None,
     block: tuple[int, int, int],
     interpret: bool,
-) -> jax.Array:
+    save_preact: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Shared WS/IS driver: aliased partial-sum accumulation over outer k."""
     M, K = a.shape
     _, N = b.shape
@@ -257,7 +307,8 @@ def _matmul_stream(
     else:  # pragma: no cover
         raise ValueError(stationary)
     fused = (
-        bias is not None or residual is not None or activation is not None
+        save_preact
+        or bias is not None or residual is not None or activation is not None
         or (out_dtype is not None and jnp.dtype(out_dtype) != jnp.float32)
     )
     # The residual is only read in the last-k flush, but its natural (i, j)
@@ -276,6 +327,7 @@ def _matmul_stream(
     kern = functools.partial(
         _stream_accum_kernel, activation=activation,
         has_bias=bias is not None, has_res=residual is not None, fused=fused,
+        save_preact=save_preact,
     )
     out_specs = pl.BlockSpec((bm, bn), c_map)
     out_shape = jax.ShapeDtypeStruct((M, N), jnp.float32)
@@ -295,6 +347,8 @@ def _matmul_stream(
         ),
         interpret=interpret,
     )(a, b, *extra)
+    if save_preact:
+        return result[1], result[0]  # (finished out, staged pre-activation)
     return result[1] if fused else result
 
 
@@ -338,15 +392,19 @@ def fused_matmul(
     out_dtype: jnp.dtype | None = None,
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     interpret: bool = False,
-) -> jax.Array:
+    save_preact: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Matmul with the epilogue fused into the kernel's final flush.
 
     ``bias`` must be (1, N); ``residual`` (M, N); all dims block multiples
     (ops.flex_linear pads).  ``activation`` in {relu, gelu, silu, None}.
+    With ``save_preact`` returns ``(out, z)`` where ``z`` is the f32
+    pre-activation ``a @ b + bias`` — what the custom VJP saves.
     """
     if activation is not None and activation not in ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
     return KERNELS[dataflow](
         a, b, bias=bias, residual=residual, activation=activation,
         out_dtype=out_dtype, block=block, interpret=interpret,
+        save_preact=save_preact,
     )

@@ -11,11 +11,37 @@ paper-claims suite; ``auto_matmul`` adds trace-time CMU dataflow selection.
 The model stack falls back to plain XLA einsum when the kernel path is
 disabled (CPU dry-runs / compile-only meshes, where XLA must see a fusible
 dot for cost_analysis).
+
+**Training (custom VJP).**  Both ops carry a ``jax.custom_vjp`` so
+``jax.grad`` keeps the hot path on Pallas: the two backward GEMMs
+
+  dX[M,K] = dY[M,N] @ W^T[N,K]        (cotangent wrt activations)
+  dW[K,N] = X^T[K,M] @ dY[M,N]        (cotangent wrt weights)
+
+run as flex kernels under their **own** (dataflow, block) — the backward
+shapes generally prefer different stationarity than the forward (the paper's
+per-layer reconfiguration argument applied to training).  ``flex_linear``
+takes ``bwd_dx`` / ``bwd_dw`` overrides from a CMU train plan (None means
+the trace-time roofline argmin); ``flex_matmul``'s backward always uses the
+trace-time argmin.
+
+Residual policy: **save, don't recompute**.  The forward kernel emits the
+f32 pre-activation ``z = x @ w + b`` as a second output (``save_preact``) —
+free for WS/IS whose staging buffer already materialises it, one extra f32
+write for OS — and the VJP differentiates the epilogue as
+
+  d_residual = dY
+  dZ         = dY * act'(z)           (via jax.vjp of the activation at z)
+  d_bias     = sum_M dZ
+
+Saving z costs M*N*4 bytes of HBM versus recomputing the full forward GEMM
+in the backward pass; on every shape the CMU models, the write is cheaper.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +49,10 @@ import jax.numpy as jnp
 from repro.core.dataflow import Dataflow, GemmShape, best_kernel_dataflow
 
 from . import flex_matmul as fk
+
+# (dataflow, block) override for one backward GEMM, e.g. from a CMU plan:
+#   (Dataflow.WS, (256, 256, 256))  — block may be None for DEFAULT_BLOCK
+BwdSpec = tuple[Dataflow, "tuple[int, int, int] | None"]
 
 
 def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -50,6 +80,69 @@ def _fit_block(M: int, K: int, N: int, block: tuple[int, int, int]):
     return fit(M, bm), fit(K, bk), fit(N, bn)
 
 
+def _round_up_dim(d: int, mult: int = 128) -> int:
+    """Smallest MXU-aligned extent covering d (min 8 sublanes for tiny dims)."""
+    if d >= mult:
+        return -(-d // mult) * mult
+    r = 8
+    while r < d:
+        r *= 2
+    return r
+
+
+def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int):
+    """Resolve one backward GEMM's (dataflow, block): the CMU plan's choice
+    when given, else the trace-time roofline argmin (shapes are static)."""
+    if spec is not None:
+        df, blk = spec
+        return df, tuple(blk) if blk else fk.DEFAULT_BLOCK
+    df, _ = best_kernel_dataflow(GemmShape(M=M, K=K, N=N))
+    return df, fk.DEFAULT_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# flex_matmul — bare matmul with a flex-kernel VJP
+# ---------------------------------------------------------------------------
+
+
+def _matmul_run(a, b, dataflow, block, interpret, out_dtype):
+    """Primal blocked matmul: pad -> flex kernel -> unpad -> cast."""
+    M, K = a.shape
+    _, N = b.shape
+    bm, bk, bn = _fit_block(M, K, N, block)
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret)
+    out = out[:M, :N]
+    return out.astype(out_dtype or jnp.promote_types(a.dtype, b.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _matmul_core(cfg, a, b):
+    return _matmul_run(a, b, *cfg)
+
+
+def _matmul_fwd(cfg, a, b):
+    return _matmul_core(cfg, a, b), (a, b)
+
+
+def _matmul_bwd(cfg, residuals, g):
+    dataflow, block, interpret, out_dtype = cfg
+    a, b = residuals
+    M, K = a.shape
+    N = b.shape[1]
+    # dA = g @ B^T is an (M,N)x(N,K) GEMM; dB = A^T @ g is (K,M)x(M,N) —
+    # each gets its own trace-time dataflow pick (shapes differ from fwd).
+    df_da, blk_da = _bwd_choice(None, M, N, K)
+    df_db, blk_db = _bwd_choice(None, K, M, N)
+    da = _matmul_run(g, b.T, df_da, blk_da, interpret, a.dtype)
+    db = _matmul_run(a.T, g, df_db, blk_db, interpret, b.dtype)
+    return da, db
+
+
+_matmul_core.defvjp(_matmul_fwd, _matmul_bwd)
+
+
 @functools.partial(
     jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype")
 )
@@ -61,22 +154,107 @@ def flex_matmul(
     interpret: bool = False,
     out_dtype: jnp.dtype | None = None,
 ) -> jax.Array:
-    """C = A @ B under the given dataflow; pads/unpads to block multiples."""
+    """C = A @ B under the given dataflow; pads/unpads to block multiples.
+
+    Differentiable: ``jax.grad`` routes both cotangent GEMMs back through
+    the flex kernels (see the module docstring's VJP contract).
+    """
     M, K = a.shape
     K2, N = b.shape
     if K != K2:
         raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
-    bm, bk, bn = _fit_block(M, K, N, block)
-    ap = _pad_to(a, bm, bk)
-    bp = _pad_to(b, bk, bn)
-    out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret)
-    out = out[:M, :N]
-    return out.astype(out_dtype or jnp.promote_types(a.dtype, b.dtype))
+    return _matmul_core((dataflow, block, interpret, out_dtype), a, b)
+
+
+# ---------------------------------------------------------------------------
+# flex_linear — fused linear layer with a flex-kernel VJP
+# ---------------------------------------------------------------------------
+
+
+class _LinearCfg(NamedTuple):
+    """Hashable trace-time config for one fused linear (the nondiff arg)."""
+
+    activation: str | None
+    dataflow: Dataflow
+    block: tuple[int, int, int]
+    interpret: bool
+    out_dtype: jnp.dtype | None
+    bwd_dx: BwdSpec | None
+    bwd_dw: BwdSpec | None
+
+
+def _linear_run(cfg: _LinearCfg, x, w, b, residual, save_preact: bool):
+    """Primal fused linear; returns (out, z) with z=None unless save_preact."""
+    M, K = x.shape
+    _, N = w.shape
+    bm, bk, bn = _fit_block(M, K, N, cfg.block)
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    bp = None if b is None else _pad_to(b.reshape(1, N), 1, bn)
+    rp = None if residual is None else _pad_to(residual, bm, bn)
+    odt = cfg.out_dtype or jnp.promote_types(x.dtype, w.dtype)
+    out = fk.fused_matmul(
+        xp, wp, cfg.dataflow,
+        bias=bp, residual=rp, activation=cfg.activation, out_dtype=odt,
+        block=(bm, bk, bn), interpret=cfg.interpret, save_preact=save_preact,
+    )
+    if save_preact:
+        out, z = out
+        return out[:M, :N].astype(odt), z[:M, :N]
+    return out[:M, :N].astype(odt), None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_core(cfg: _LinearCfg, x, w, b, residual):
+    out, _ = _linear_run(cfg, x, w, b, residual, save_preact=False)
+    return out
+
+
+def _linear_fwd(cfg: _LinearCfg, x, w, b, residual):
+    # z is only needed to differentiate the activation; bias/residual grads
+    # come straight from the cotangent.  Zero-size protos carry the epilogue
+    # operands' dtypes to bwd without retaining the arrays.
+    need_z = cfg.activation is not None
+    out, z = _linear_run(cfg, x, w, b, residual, save_preact=need_z)
+    # zero-size protos keep b/residual's shape rank and dtype for bwd (the
+    # cotangent aval must match the primal: (N,) vs (1, N) bias both work)
+    b_proto = None if b is None else jnp.zeros((0,) * b.ndim, b.dtype)
+    r_proto = None if residual is None else jnp.zeros((0,), residual.dtype)
+    return out, (x, w, b_proto, r_proto, z)
+
+
+def _linear_bwd(cfg: _LinearCfg, residuals, g):
+    x, w, b_proto, r_proto, z = residuals
+    M, K = x.shape
+    N = w.shape[1]
+    g32 = g.astype(jnp.float32)
+    if cfg.activation is not None:
+        # exact activation derivative at the saved pre-activation
+        _, act_vjp = jax.vjp(fk.ACTIVATIONS[cfg.activation], z)
+        dz = act_vjp(g32)[0]
+    else:
+        dz = g32
+    # the two backward GEMMs, each under its own CMU-planned dataflow
+    df_dx, blk_dx = _bwd_choice(cfg.bwd_dx, M, N, K)
+    df_dw, blk_dw = _bwd_choice(cfg.bwd_dw, K, M, N)
+    gd = dz.astype(jnp.promote_types(x.dtype, w.dtype))
+    dx = _matmul_run(gd, w.T, df_dx, blk_dx, cfg.interpret, x.dtype)
+    dw = _matmul_run(x.T, gd, df_dw, blk_dw, cfg.interpret, w.dtype)
+    if b_proto is None:
+        db = None
+    else:
+        db = dz.sum(axis=0, keepdims=b_proto.ndim == 2).astype(b_proto.dtype)
+    dr = None if r_proto is None else g.astype(r_proto.dtype)
+    return dx, dw, db, dr
+
+
+_linear_core.defvjp(_linear_fwd, _linear_bwd)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("activation", "dataflow", "block", "interpret", "out_dtype"),
+    static_argnames=("activation", "dataflow", "block", "interpret",
+                     "out_dtype", "bwd_dx", "bwd_dw"),
 )
 def flex_linear(
     x: jax.Array,
@@ -89,6 +267,8 @@ def flex_linear(
     block: tuple[int, int, int] = fk.DEFAULT_BLOCK,
     interpret: bool = False,
     out_dtype: jnp.dtype | None = None,
+    bwd_dx: BwdSpec | None = None,
+    bwd_dw: BwdSpec | None = None,
 ) -> jax.Array:
     """Fused linear layer: ``act(x @ w + b) + residual`` in one kernel pass.
 
@@ -98,33 +278,32 @@ def flex_linear(
     accumulator block is resident in VMEM — no extra HBM round-trips.
     Pads/unpads to block multiples (zero padding is epilogue-safe: the padded
     rows/cols are sliced off before any consumer sees them).
+
+    Differentiable end-to-end: under ``jax.grad`` the backward GEMMs
+    ``dX = dY @ W^T`` and ``dW = X^T @ dY`` run as flex kernels under
+    ``bwd_dx`` / ``bwd_dw`` — ``(Dataflow, (bm, bk, bn))`` tuples, normally
+    supplied by the CMU train plan — or the trace-time roofline argmin when
+    None.  The activation gradient uses the pre-activation the forward
+    kernel saved (see module docstring for the save-vs-recompute policy).
+
+    Examples (interpret mode, so they run anywhere):
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.kernels import flex_linear
+    >>> x = jnp.ones((8, 16)); w = jnp.full((16, 8), 0.1)
+    >>> flex_linear(x, w, activation="relu", interpret=True).shape
+    (8, 8)
+    >>> dx = jax.grad(lambda x: flex_linear(x, w, interpret=True).sum())(x)
+    >>> round(float(dx[0, 0]), 4)   # d/dx sum(x @ w) = sum_N w = 0.8
+    0.8
     """
     M, K = x.shape
     K2, N = w.shape
     if K != K2:
         raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
-    bm, bk, bn = _fit_block(M, K, N, block)
-    xp = _pad_to(x, bm, bk)
-    wp = _pad_to(w, bk, bn)
-    bp = None if b is None else _pad_to(b.reshape(1, N), 1, bn)
-    rp = None if residual is None else _pad_to(residual, bm, bn)
-    odt = out_dtype or jnp.promote_types(x.dtype, w.dtype)
-    out = fk.fused_matmul(
-        xp, wp, dataflow,
-        bias=bp, residual=rp, activation=activation, out_dtype=odt,
-        block=(bm, bk, bn), interpret=interpret,
-    )
-    return out[:M, :N].astype(odt)
-
-
-def _round_up_dim(d: int, mult: int = 128) -> int:
-    """Smallest MXU-aligned extent covering d (min 8 sublanes for tiny dims)."""
-    if d >= mult:
-        return -(-d // mult) * mult
-    r = 8
-    while r < d:
-        r *= 2
-    return r
+    cfg = _LinearCfg(activation, dataflow, block, interpret, out_dtype,
+                     bwd_dx, bwd_dw)
+    return _linear_core(cfg, x, w, b, residual)
 
 
 def auto_matmul(

@@ -110,14 +110,18 @@ def make_decode_step(model: Model) -> Callable:
     return decode
 
 
-def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True):
+def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True,
+                     train: bool = False):
     """Program the CMU for a serve/train run.
 
     Loads the persisted ``DataflowPlan`` from ``path`` when it exists;
     otherwise runs the measured autotune over the config's GEMMs and saves
     the winner to ``path`` so the next launch skips tuning.  The activated
     plan drives every ``models.layers.linear`` dispatch when the config runs
-    with ``use_pallas``.  Returns the plan (or None when no path given).
+    with ``use_pallas``.  With ``train=True`` the plan must carry per-layer
+    backward sub-plans (the fwd + dX + dW group) — a fwd-only cache is
+    re-tuned, so ``--pallas`` training never runs unplanned backward GEMMs.
+    Returns the plan (or None when no path given).
     """
     if not path:
         return None
@@ -126,12 +130,13 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     from repro.core import activate_plan, load_or_autotune, model_gemms
 
     gemms = model_gemms(cfg, tokens)
-    plan, loaded = load_or_autotune(path, gemms, measure=measure)
+    plan, loaded = load_or_autotune(path, gemms, require_bwd=train, measure=measure)
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
     logging.getLogger(__name__).info(
-        "plan cache %s: %s (%d layers, histogram %s)",
-        src, path, len(plan.layers), plan.histogram(),
+        "plan cache %s: %s (%d layers%s, histogram %s)",
+        src, path, len(plan.layers),
+        " incl. bwd sub-plans" if plan.has_bwd() else "", plan.histogram(),
     )
     return plan
 

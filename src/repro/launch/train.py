@@ -49,15 +49,11 @@ def main() -> None:
     ap.add_argument("--plan-cache", default="",
                     help="CMU plan JSON: reload if present, else autotune + save")
     ap.add_argument("--pallas", action="store_true",
-                    help="dispatch projections to the fused flex kernels "
-                         "(inference-only until the kernels grow a custom VJP)")
+                    help="dispatch projections — forward AND backward GEMMs "
+                         "— to the fused flex kernels via the custom VJP; "
+                         "the plan cache then carries per-layer fwd/dX/dW "
+                         "sub-plans")
     args = ap.parse_args()
-    if args.pallas:
-        # pallas_call has no autodiff rule on the pinned jax; grad through the
-        # fused kernels dies deep in tracing.  Fail fast with the real reason.
-        ap.error("--pallas is inference-only for now (the fused kernels have "
-                 "no custom VJP yet — see ROADMAP); train still uses the "
-                 "autotuned --plan-cache for the XLA path")
 
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -65,7 +61,16 @@ def main() -> None:
         cfg = cfg.replace(d_model=args.d_model)
     if args.layers:
         cfg = cfg.replace(num_layers=args.layers)
-    setup_plan_cache(args.plan_cache, cfg, args.global_batch * args.seq)
+    if args.pallas:
+        cfg = cfg.replace(use_pallas=True)
+    mb = args.microbatches or microbatches_for(args.arch)
+    mb = mb if args.global_batch % max(mb, 1) == 0 else 1
+    # training plans group each layer's three GEMMs (fwd + dX + dW) so the
+    # backward pass reconfigures per layer too; under grad accumulation each
+    # GEMM runs per microbatch, so that is the geometry to tune for
+    setup_plan_cache(args.plan_cache, cfg,
+                     args.global_batch // max(mb, 1) * args.seq,
+                     train=args.pallas)
     model = Model(cfg)
     total, active = cfg.param_count()
     print(f"arch={cfg.name} params={total/1e6:.1f}M (active {active/1e6:.1f}M)")
@@ -73,11 +78,10 @@ def main() -> None:
     stream = TokenStream(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.global_batch)
     )
-    mb = args.microbatches or microbatches_for(args.arch)
     jit_step = jax.jit(
         make_train_step(
             model, peak_lr=args.lr, warmup=args.warmup,
-            total_steps=args.steps, microbatches=mb if args.global_batch % max(mb, 1) == 0 else 1,
+            total_steps=args.steps, microbatches=mb,
         ),
         donate_argnums=(0, 1),
     )

@@ -39,8 +39,11 @@ def linear(
 
     With ``cfg.use_pallas`` this is one fused flex-kernel launch: the CMU
     plan (``core.plan_cache.active_plan``) supplies (dataflow, block) for
-    ``name``; unplanned layers fall back to the trace-time roofline argmin.
-    Otherwise plain XLA ops (einsum + separate epilogue), the dry-run path.
+    ``name`` — including the per-layer backward sub-plans, so under
+    ``jax.grad`` the cotangent GEMMs also run as flex kernels under their
+    own dataflows.  Unplanned layers fall back to the trace-time roofline
+    argmin.  Otherwise plain XLA ops (einsum + separate epilogue), the
+    dry-run path.
     """
     w = w.astype(x.dtype)
     if cfg.use_pallas:
@@ -55,8 +58,13 @@ def linear(
         r2 = None if residual is None else residual.reshape(-1, N)
         plan = active_plan()
         lp = plan.get(name) if (plan is not None and name) else None
+        bwd_dx = bwd_dw = None
         if lp is not None:
             df, blk = lp.dataflow, lp.block or DEFAULT_BLOCK
+            if lp.bwd_dx is not None:
+                bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block)
+            if lp.bwd_dw is not None:
+                bwd_dw = (lp.bwd_dw.dataflow, lp.bwd_dw.block)
         else:
             df, _ = best_kernel_dataflow(GemmShape(x2.shape[0], K, N, name=name))
             blk = DEFAULT_BLOCK
@@ -64,6 +72,7 @@ def linear(
             x2, w, None if b is None else b.astype(x.dtype),
             activation=activation, residual=r2, dataflow=df, block=blk,
             interpret=default_interpret(), out_dtype=x.dtype,
+            bwd_dx=bwd_dx, bwd_dw=bwd_dw,
         )
         return out.reshape(*lead, N)
     y = jnp.einsum("...d,df->...f", x, w)

@@ -1,0 +1,320 @@
+"""Training-grade flex kernels: custom VJP + grouped fwd/bwd CMU plans.
+
+The PR's acceptance bar: ``jax.grad`` through ``flex_linear`` must match the
+reference path to fp32 tolerance for all three dataflows x (bias,
+relu/gelu/silu, residual) combinations; a train plan must carry distinct
+fwd/bwd sub-plans when the tuner ranks them as such; and an old-version
+plan-cache file must load (or be rejected with a clear re-tune message)
+rather than crash.
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    Dataflow,
+    GemmShape,
+    activate_plan,
+    autotune_plan,
+    bwd_gemms,
+    load_or_autotune,
+    load_plan,
+    model_gemms,
+    save_plan,
+)
+from repro.kernels import flex_linear, flex_matmul, linear_ref
+
+RNG = np.random.default_rng(11)
+
+
+def _rand(shape, dtype=jnp.float32, scale=0.2):
+    return jnp.asarray(RNG.normal(size=shape) * scale, np.float32).astype(dtype)
+
+
+def _grads(fn, *args):
+    return jax.grad(fn, argnums=tuple(range(len(args))))(*args)
+
+
+def _assert_close(got, want, tol=2e-4):
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# gradient correctness vs the reference path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("df", ALL_DATAFLOWS)
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu"])
+def test_linear_grads_match_ref_all_dataflows(df, activation):
+    """Full epilogue (bias + activation + residual): d(x, w, b, res)."""
+    M, K, N = 96, 200, 130  # unaligned -> exercises the pad/unpad path too
+    x, w = _rand((M, K)), _rand((K, N))
+    b, res = _rand((N,)), _rand((M, N))
+    ct = _rand((M, N), scale=1.0)  # non-trivial cotangent
+
+    def loss(x, w, b, res):
+        y = flex_linear(x, w, b, activation=activation, residual=res,
+                        dataflow=df, block=(128, 128, 128), interpret=True)
+        return (y * ct).sum()
+
+    def ref(x, w, b, res):
+        return (linear_ref(x, w, b, activation=activation, residual=res) * ct).sum()
+
+    _assert_close(_grads(loss, x, w, b, res), _grads(ref, x, w, b, res))
+
+
+@pytest.mark.parametrize("df", ALL_DATAFLOWS)
+def test_linear_grads_epilogue_pieces_compose(df):
+    """bias-only / residual-only / bare combinations all differentiate."""
+    x, w = _rand((64, 96)), _rand((96, 72))
+    b, res = _rand((72,)), _rand((64, 72))
+    for bias in (None, b):
+        for r in (None, res):
+            args = [a for a in (x, w, bias, r) if a is not None]
+
+            def loss(*a, _nb=bias is None, _nr=r is None):
+                it = iter(a)
+                xx, ww = next(it), next(it)
+                bb = None if _nb else next(it)
+                rr = None if _nr else next(it)
+                return flex_linear(xx, ww, bb, activation="gelu", residual=rr,
+                                   dataflow=df, block=(64, 96, 72),
+                                   interpret=True).sum()
+
+            def ref(*a, _nb=bias is None, _nr=r is None):
+                it = iter(a)
+                xx, ww = next(it), next(it)
+                bb = None if _nb else next(it)
+                rr = None if _nr else next(it)
+                return linear_ref(xx, ww, bb, activation="gelu", residual=rr).sum()
+
+            _assert_close(_grads(loss, *args), _grads(ref, *args))
+
+
+@pytest.mark.parametrize("df", ALL_DATAFLOWS)
+def test_matmul_grads_match_dot(df):
+    a, b = _rand((64, 96)), _rand((96, 72))
+
+    def loss(a, b):
+        return (flex_matmul(a, b, dataflow=df, interpret=True) ** 2).sum()
+
+    def ref(a, b):
+        return (jnp.dot(a, b, preferred_element_type=jnp.float32) ** 2).sum()
+
+    _assert_close(_grads(loss, a, b), _grads(ref, a, b), tol=1e-3)
+
+
+def test_bwd_spec_overrides_are_honoured():
+    """CMU-planned (dataflow, block) for dX/dW flow through the VJP; every
+    combination still produces the reference gradient."""
+    x, w, b = _rand((64, 96)), _rand((96, 72)), _rand((72,))
+    ref_dx, ref_dw = _grads(
+        lambda x, w: linear_ref(x, w, b, activation="silu").sum(), x, w
+    )
+    for df in ALL_DATAFLOWS:
+        dx, dw = _grads(
+            lambda x, w, _df=df: flex_linear(
+                x, w, b, activation="silu", interpret=True,
+                bwd_dx=(_df, (64, 72, 96)), bwd_dw=(_df, (96, 64, 72)),
+            ).sum(),
+            x, w,
+        )
+        _assert_close((dx, dw), (ref_dx, ref_dw))
+
+
+def test_linear_grad_accepts_2d_bias():
+    """A (1, N) bias works forward, so its cotangent must match that shape
+    (regression: the VJP used to return (N,) and crash under grad)."""
+    x, w = _rand((32, 64)), _rand((64, 48))
+    b2 = _rand((1, 48))
+    db2, = _grads(
+        lambda b: flex_linear(x, w, b, activation="gelu", interpret=True).sum(), b2
+    )
+    assert db2.shape == (1, 48)
+    ref_db, = _grads(
+        lambda b: linear_ref(x, w, b, activation="gelu").sum(), b2
+    )
+    _assert_close((db2,), (ref_db.reshape(1, 48),))
+
+
+def test_linear_grad_bf16_inputs_run_and_are_finite():
+    """Mixed-precision training path: bf16 operands, f32 accumulation."""
+    x, w = _rand((32, 64), jnp.bfloat16), _rand((64, 32), jnp.bfloat16)
+    dx, dw = _grads(
+        lambda x, w: flex_linear(x, w, activation="gelu",
+                                 interpret=True).astype(jnp.float32).sum(),
+        x, w,
+    )
+    assert dx.dtype == jnp.bfloat16 and dw.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(dx.astype(jnp.float32))))
+    ref_dx = jax.grad(
+        lambda x: linear_ref(x, w, activation="gelu").astype(jnp.float32).sum()
+    )(x)
+    np.testing.assert_allclose(
+        np.asarray(dx, np.float32), np.asarray(ref_dx, np.float32),
+        atol=0.1, rtol=0.1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# grouped train plans (fwd + dX + dW per layer)
+# ---------------------------------------------------------------------------
+
+
+def test_bwd_gemms_shapes():
+    g = GemmShape(128, 512, 64, name="mlp.w2")
+    dx, dw = bwd_gemms(g)
+    assert (dx.M, dx.K, dx.N) == (128, 64, 512) and dx.name == "mlp.w2.dx"
+    assert (dw.M, dw.K, dw.N) == (512, 128, 64) and dw.name == "mlp.w2.dw"
+
+
+def test_train_plan_carries_bwd_subplans():
+    gemms = [GemmShape(64, 96, 64, name="attn.wq")]
+    plan = autotune_plan(gemms, top_k=1, iters=1, train=True)
+    assert plan.has_bwd()
+    lp = plan.layers[0]
+    assert lp.bwd_dx.block is not None and lp.bwd_dw.block is not None
+    assert lp.bwd_dx.est_cost > 0 and lp.bwd_dw.est_cost > 0
+    # serve plans stay fwd-only
+    assert not autotune_plan(gemms, measure=False).has_bwd()
+
+
+def test_train_plan_subplans_can_differ_from_fwd():
+    """The backward shapes transpose the fwd aspect ratio; on this shape the
+    tuner's ranking lands fwd/dX/dW on three different dataflows."""
+    plan = autotune_plan(
+        [GemmShape(128, 32768, 128, name="probe")], measure=False, train=True
+    )
+    lp = plan.layers[0]
+    picked = {lp.dataflow, lp.bwd_dx.dataflow, lp.bwd_dw.dataflow}
+    assert picked == {Dataflow.OS, Dataflow.IS, Dataflow.WS}
+
+
+def test_train_plan_roundtrip_and_activation():
+    gemms = [GemmShape(64, 96, 64, name="attn.wq"),
+             GemmShape(64, 64, 128, name="mlp.w1")]
+    plan = autotune_plan(gemms, top_k=1, iters=1, train=True)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "plan.json")
+        save_plan(p, plan)
+        plan2 = load_plan(p)
+        assert plan2.layers == plan.layers  # GemmPlan/LayerPlan frozen dataclasses
+        plan3, loaded = load_or_autotune(p, gemms, require_bwd=True)
+        assert loaded and plan3.has_bwd()
+
+
+def test_fwd_only_cache_upgraded_incrementally_for_training():
+    """Serving cache (no bwd sub-plans) must not silently drive training —
+    and the upgrade keeps the (possibly measured) forward decisions, tuning
+    only the missing dX/dW sub-GEMMs."""
+    gemms = [GemmShape(64, 96, 64, name="attn.wq")]
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "plan.json")
+        serve_plan = autotune_plan(gemms, top_k=1, iters=1)  # measured fwd
+        save_plan(p, serve_plan)
+        plan, loaded = load_or_autotune(p, gemms, require_bwd=True,
+                                        measure=False)
+        assert not loaded and plan.has_bwd()
+        lp, old = plan.layers[0], serve_plan.layers[0]
+        # fwd decision preserved verbatim (incl. its measured provenance)
+        assert (lp.dataflow, lp.block, lp.est_cost, lp.source) == (
+            old.dataflow, old.block, old.est_cost, old.source)
+        # and the upgraded cache now satisfies training directly
+        plan2, loaded2 = load_or_autotune(p, gemms, require_bwd=True,
+                                          measure=False)
+        assert loaded2 and plan2.has_bwd()
+
+
+# ---------------------------------------------------------------------------
+# plan-cache schema migration
+# ---------------------------------------------------------------------------
+
+
+def _v1_payload():
+    return {
+        "version": 1,
+        "layers": [{
+            "name": "attn.wq", "M": 64, "K": 96, "N": 64,
+            "dataflow": "OS", "est_cost": 1.0,
+            "block": [64, 128, 64], "source": "measured",
+        }],
+    }
+
+
+def test_v1_cache_file_loads_without_bwd():
+    """A pre-upgrade cache file loads (rows are a subset of v2) — serving
+    keeps working across the schema bump."""
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "plan.json")
+        with open(p, "w") as f:
+            json.dump(_v1_payload(), f)
+        plan = load_plan(p)
+        assert plan.layers[0].dataflow is Dataflow.OS
+        assert plan.layers[0].bwd_dx is None and not plan.has_bwd()
+
+
+def test_v1_cache_satisfies_serve_but_not_train():
+    gemms = [GemmShape(64, 96, 64, name="attn.wq")]
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "plan.json")
+        with open(p, "w") as f:
+            json.dump(_v1_payload(), f)
+        plan, loaded = load_or_autotune(p, gemms, measure=False)
+        assert loaded  # serve path: v1 cache still honoured
+        plan2, loaded2 = load_or_autotune(p, gemms, require_bwd=True,
+                                          measure=False)
+        assert not loaded2 and plan2.has_bwd()  # train path: re-tuned
+
+
+def test_future_version_rejected_with_retune_message():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "plan.json")
+        with open(p, "w") as f:
+            json.dump({"version": 99, "layers": []}, f)
+        with pytest.raises(ValueError, match="re-tune"):
+            load_plan(p)
+
+
+# ---------------------------------------------------------------------------
+# model integration: jax.grad through the full stack, pallas == XLA
+# ---------------------------------------------------------------------------
+
+
+def test_model_grads_pallas_match_xla():
+    from repro.models import Model, get_config
+
+    cfg = get_config("qwen3_4b", smoke=True).replace(
+        dtype="float32", param_dtype="float32"
+    )
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    lref, gref = jax.value_and_grad(lambda p: m.loss(p, batch)[0])(params)
+
+    plan = autotune_plan(model_gemms(cfg, tokens=32), top_k=1, iters=1,
+                         train=True)
+    assert plan.has_bwd()
+    activate_plan(plan)
+    try:
+        mp = Model(cfg.replace(use_pallas=True))
+        lp, gp = jax.value_and_grad(lambda p: mp.loss(p, batch)[0])(params)
+    finally:
+        activate_plan(None)
+
+    assert abs(float(lref) - float(lp)) < 1e-5
+    flat_ref, _ = jax.tree.flatten(gref)
+    flat_pal, _ = jax.tree.flatten(gp)
+    for a, b in zip(flat_ref, flat_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-3)

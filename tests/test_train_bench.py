@@ -1,0 +1,21 @@
+"""Fast-lane smoke: benchmarks/train_step.py --dry-run must stay green.
+
+The dry run asserts fwd+bwd gradient correctness of the flex-kernel train
+step against the XLA reference on tiny shapes, so this doubles as an
+end-to-end check of the custom VJP + train-plan wiring from the benchmark's
+angle (plan -> bwd_dx/bwd_dw specs -> value_and_grad).
+"""
+
+import os
+import runpy
+import sys
+
+BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "train_step.py")
+
+
+def test_train_step_benchmark_dry_run(monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv", [BENCH, "--dry-run"])
+    runpy.run_path(BENCH, run_name="__main__")
+    out = capsys.readouterr().out
+    assert "gradients match the XLA reference" in out
+    assert "dry-run OK" in out
