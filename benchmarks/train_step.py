@@ -1,39 +1,52 @@
 """Fwd+bwd microbenchmark: one training step of an MLP block through the
 flex kernels' custom VJP vs the XLA reference path.
 
-Per layer the CMU train plan programs THREE (dataflow, block) decisions —
-forward, dX = dY @ W^T, dW = X^T @ dY — and this benchmark reports all of
-them next to the measured step walltimes.  On CPU the kernels run in Pallas
-interpret mode, so the walltime columns are dispatch sanity checks, not TPU
-performance; the dataflow columns are the paper's point (the backward GEMMs
-transpose the forward aspect ratio and land on different stationarity).
+Per layer the CMU train plan programs THREE decisions — forward,
+dX = dY @ W^T, dW = X^T @ dY, each a (dataflow, block, operand-layout)
+triple — and this benchmark reports all of them next to the measured step
+walltimes.  The backward GEMMs run **transpose-free** by default (the
+kernels stream W and X as stored through transposed index maps); the
+``copy-bwd`` column forces the pre-v3 behaviour (materialise ``w.T`` /
+``x.T`` in HBM before each backward kernel) so the trajectory of the
+transpose-free win stays visible.  On CPU the kernels run in Pallas
+interpret mode, so walltimes are dispatch sanity checks, not TPU
+performance; the HBM-bytes column is the analytical estimate the CMU ranks
+with.  ``--json`` writes the full record (see BENCH_train_step.json for the
+checked-in baseline).
 
   PYTHONPATH=src python benchmarks/train_step.py [--tokens 256] [--iters 3]
+  PYTHONPATH=src python benchmarks/train_step.py --json out.json
   PYTHONPATH=src python benchmarks/train_step.py --dry-run   # CI smoke
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GemmShape, autotune_plan
-from repro.kernels import flex_linear, linear_ref
+from repro.core import NO_TRANS, GemmShape, autotune_plan, bwd_gemms, hbm_traffic_bytes
+from repro.kernels import DEFAULT_BLOCK, flex_linear, linear_ref
 
 
-def _bwd_spec(sub):
-    return None if sub is None else (sub.dataflow, sub.block)
+def _bwd_spec(sub, force_copy: bool = False):
+    if sub is None:
+        return None
+    trans = NO_TRANS if force_copy else sub.trans
+    return (sub.dataflow, sub.block, trans)
 
 
-def build_losses(plan, interpret: bool):
+def build_losses(plan, interpret: bool, force_copy_bwd: bool = False):
     """(pallas_loss, ref_loss) over a gated-MLP block: w1 -> gelu -> w2 (+res).
 
     The pallas loss dispatches every GEMM — forward and, via the custom VJP,
-    backward — per the train plan's sub-plans.
+    backward — per the train plan's sub-plans.  ``force_copy_bwd`` overrides
+    every backward sub-plan's operand layout to (False, False), i.e. the
+    copy-based fallback that materialises the transposed operand in HBM.
     """
     by_name = {lp.name: lp for lp in plan.layers}
 
@@ -47,7 +60,8 @@ def build_losses(plan, interpret: bool):
             h = flex_linear(
                 h, w, b, activation=act, residual=res,
                 dataflow=lp.dataflow, block=lp.block, interpret=interpret,
-                bwd_dx=_bwd_spec(lp.bwd_dx), bwd_dw=_bwd_spec(lp.bwd_dw),
+                bwd_dx=_bwd_spec(lp.bwd_dx, force_copy_bwd),
+                bwd_dw=_bwd_spec(lp.bwd_dw, force_copy_bwd),
             )
         return (h * h).mean()
 
@@ -63,6 +77,28 @@ def build_losses(plan, interpret: bool):
     return pallas_loss, ref_loss
 
 
+def bwd_hbm_bytes(plan) -> dict[str, int]:
+    """Analytical HBM bytes of the plan's backward GEMMs, transpose-free vs
+    via-copy.  The kernel traffic is identical (same (dataflow, block)
+    schedule reads the same blocks, just through swapped index maps); the
+    copy path additionally round-trips the transposed operand through HBM —
+    one f32 read + one write of W per dX and of X per dW.
+    """
+    kernel = copy_extra = 0
+    for lp in plan.layers:
+        g_dx, g_dw = bwd_gemms(lp.gemm)
+        # the operand the copy path materialises: W (the B operand, K*N) for
+        # dX, X (the A operand, M*K) for dW
+        for g, sub, copied in ((g_dx, lp.bwd_dx, g_dx.K * g_dx.N),
+                               (g_dw, lp.bwd_dw, g_dw.M * g_dw.K)):
+            assert sub is not None, "bwd_hbm_bytes needs a train=True plan"
+            blk = sub.block or DEFAULT_BLOCK
+            kernel += hbm_traffic_bytes(g, sub.dataflow, *blk,
+                                        in_bytes=4).hbm_bytes
+            copy_extra += 2 * copied * 4  # f32 read + write of the copy
+    return {"bwd_transpose_free": kernel, "bwd_via_copy": kernel + copy_extra}
+
+
 def _timeit(fn, *args) -> float:
     t0 = time.perf_counter()
     jax.block_until_ready(fn(*args))
@@ -75,6 +111,8 @@ def main() -> None:
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--d-ff", type=int, default=512)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full benchmark record as JSON")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny shapes, 1 iter, grad-correctness assert (CI smoke)")
     args = ap.parse_args()
@@ -85,12 +123,13 @@ def main() -> None:
     gemms = [GemmShape(T, D, F, name="mlp.w1"), GemmShape(T, F, D, name="mlp.w2")]
     plan = autotune_plan(gemms, top_k=2, iters=1, train=True)
 
-    print(f"{'layer':8} {'gemm (M,K,N)':>18} {'fwd':>4} {'dX':>4} {'dW':>4}")
+    print(f"{'layer':8} {'gemm (M,K,N)':>18} {'fwd':>4} {'dX':>8} {'dW':>8}")
     for lp in plan.layers:
         g = lp.gemm
+        dx_tag = lp.bwd_dx.dataflow.name + ("" if lp.bwd_dx.trans == (False, False) else "/T")
+        dw_tag = lp.bwd_dw.dataflow.name + ("" if lp.bwd_dw.trans == (False, False) else "/T")
         print(f"{lp.name:8} {f'({g.M},{g.K},{g.N})':>18} "
-              f"{lp.dataflow.name:>4} {lp.bwd_dx.dataflow.name:>4} "
-              f"{lp.bwd_dw.dataflow.name:>4}")
+              f"{lp.dataflow.name:>4} {dx_tag:>8} {dw_tag:>8}")
 
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(T, D)) * 0.1, jnp.float32)
@@ -102,20 +141,53 @@ def main() -> None:
     }
 
     pallas_loss, ref_loss = build_losses(plan, interpret=True)
+    copy_loss, _ = build_losses(plan, interpret=True, force_copy_bwd=True)
     pallas_step = jax.jit(jax.value_and_grad(pallas_loss))
+    copy_step = jax.jit(jax.value_and_grad(copy_loss))
     ref_step = jax.jit(jax.value_and_grad(ref_loss))
 
     (lp_, gp), (lr, gr) = pallas_step(params, x), ref_step(params, x)
+    (lc, gc) = copy_step(params, x)
     np.testing.assert_allclose(float(lp_), float(lr), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(lc), float(lr), atol=1e-5, rtol=1e-5)
     for k in params:
         np.testing.assert_allclose(np.asarray(gp[k][0]), np.asarray(gr[k][0]),
                                    atol=2e-4, rtol=2e-4)
-    print("fwd+bwd gradients match the XLA reference")
+        np.testing.assert_allclose(np.asarray(gc[k][0]), np.asarray(gr[k][0]),
+                                   atol=2e-4, rtol=2e-4)
+    print("fwd+bwd gradients match the XLA reference (transpose-free and copy bwd)")
 
     tp = min(_timeit(pallas_step, params, x) for _ in range(args.iters))
+    tc = min(_timeit(copy_step, params, x) for _ in range(args.iters))
     tr = min(_timeit(ref_step, params, x) for _ in range(args.iters))
+    hbm = bwd_hbm_bytes(plan)
     print(f"step walltime: pallas {tp*1e3:8.2f} ms ({T/tp:10,.0f} tok/s)   "
-          f"xla {tr*1e3:8.2f} ms ({T/tr:10,.0f} tok/s)")
+          f"copy-bwd {tc*1e3:8.2f} ms   xla {tr*1e3:8.2f} ms ({T/tr:10,.0f} tok/s)")
+    print(f"bwd HBM bytes (analytical): transpose-free {hbm['bwd_transpose_free']:,} "
+          f"vs via-copy {hbm['bwd_via_copy']:,} "
+          f"({hbm['bwd_via_copy'] / hbm['bwd_transpose_free']:.2f}x)")
+
+    if args.json:
+        record = {
+            "config": {"tokens": T, "d_model": D, "d_ff": F,
+                       "iters": args.iters, "interpret": True},
+            "layers": [
+                {
+                    "name": lp.name,
+                    "gemm": [lp.gemm.M, lp.gemm.K, lp.gemm.N],
+                    "fwd": {"dataflow": lp.dataflow.name,
+                            "block": list(lp.block) if lp.block else None},
+                    "dx": lp.bwd_dx.to_row(),
+                    "dw": lp.bwd_dw.to_row(),
+                }
+                for lp in plan.layers
+            ],
+            "walltime_s": {"pallas": tp, "pallas_copy_bwd": tc, "xla": tr},
+            "hbm_bytes_est": hbm,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {args.json}")
     if args.dry_run:
         print("dry-run OK")
 

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 from .dataflow import (
     ALL_DATAFLOWS,
@@ -54,15 +55,48 @@ from .dataflow import (
 )
 
 
+class EpilogueSig(NamedTuple):
+    """The epilogue signature of one layer's forward GEMM — what
+    ``measure_kernel`` times when the autotune is epilogue-aware, so the
+    measured op matches the op the model actually issues."""
+
+    activation: str | None = None
+    bias: bool = False
+    residual: bool = False
+
+
+def _epilogue_sig(epilogue) -> EpilogueSig | None:
+    """Normalise a ``measure_kernel``/``autotune_plan`` epilogue argument:
+    False/None -> bare matmul, True -> the legacy bias+gelu probe, an
+    ``EpilogueSig`` -> itself."""
+    if isinstance(epilogue, EpilogueSig):
+        return epilogue
+    if epilogue:
+        return EpilogueSig(activation="gelu", bias=True)
+    return None
+
+
+# Zero-copy operand layouts of the two backward GEMM roles (trans_a, trans_b):
+# dX = dY @ W^T streams W as stored via trans_b; dW = X^T @ dY streams X as
+# stored via trans_a.  (False, False) is the copy-based fallback.
+TRANS_DX = (False, True)
+TRANS_DW = (True, False)
+NO_TRANS = (False, False)
+
+
 @dataclass(frozen=True)
 class GemmPlan:
-    """One (dataflow, block) decision for a single GEMM — the unit the CMU
-    programs.  Used for the backward sub-plans carried by ``LayerPlan``."""
+    """One (dataflow, block, operand-layout) decision for a single GEMM —
+    the unit the CMU programs.  Used for the backward sub-plans carried by
+    ``LayerPlan``.  ``trans`` is the ``(trans_a, trans_b)`` the kernel runs
+    with: the zero-copy transposed-operand variant for backward GEMMs, or
+    ``(False, False)`` when the copy-based fallback measured faster."""
 
     dataflow: Dataflow
     block: tuple[int, int, int] | None
     est_cost: float
     source: str = "analytical"  # "analytical" | "measured"
+    trans: tuple[bool, bool] = NO_TRANS
 
     def to_row(self) -> dict:
         return {
@@ -70,6 +104,7 @@ class GemmPlan:
             "block": list(self.block) if self.block else None,
             "est_cost": self.est_cost,
             "source": self.source,
+            "trans": list(self.trans),
         }
 
     @classmethod
@@ -77,11 +112,13 @@ class GemmPlan:
         if row is None:
             return None
         blk = row.get("block")
+        trans = row.get("trans")
         return cls(
             dataflow=Dataflow[row["dataflow"]],
             block=tuple(blk) if blk else None,
             est_cost=row["est_cost"],
             source=row.get("source", "analytical"),
+            trans=tuple(bool(t) for t in trans) if trans else NO_TRANS,
         )
 
 
@@ -231,14 +268,26 @@ def measure_kernel(
     iters: int = 3,
     warmup: int = 1,
     interpret: bool | None = None,
-    epilogue: bool = False,
+    epilogue: "bool | EpilogueSig" = False,
+    trans: tuple[bool, bool] = NO_TRANS,
+    via_copy: bool = False,
 ) -> float:
     """Walltime (s) of one real kernel execution of ``gemm`` under
     (dataflow, block) — interpret mode on CPU, on-device on TPU.
 
     Returns the best of ``iters`` timed runs (min filters scheduler noise).
-    With ``epilogue`` the fused bias+gelu linear is timed instead of the bare
-    matmul, so the measurement covers the op the models actually issue.
+    ``epilogue`` selects what is timed for forward GEMMs: ``False`` the bare
+    matmul, ``True`` the legacy bias+gelu probe, or an ``EpilogueSig`` for
+    the layer's actual fused signature (so the measurement covers the op the
+    model actually issues).
+
+    ``trans`` gives the operand layouts of a backward GEMM: operands are
+    *created* transposed ((K, M) / (N, K)) and the transposed-variant kernel
+    streams them as stored.  With ``via_copy`` the same transposed operands
+    are instead materialised back to plain layout inside the timed region
+    before the plain kernel runs — the copy-based fallback, **its HBM
+    transpose cost included**, which is what makes the CMU's re-ranking of
+    the two variants honest.
     """
     import time
 
@@ -250,18 +299,35 @@ def measure_kernel(
     if interpret is None:
         interpret = ops.default_interpret()
     dtype = dtype or jnp.float32
+    sig = _epilogue_sig(epilogue)
+    if sig is not None and (trans != NO_TRANS or via_copy):
+        raise ValueError(
+            "epilogue timing is for forward GEMMs, which never run "
+            "transposed — drop epilogue or trans/via_copy"
+        )
+    trans_a, trans_b = trans
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
-    x = jax.random.normal(kx, (gemm.M, gemm.K), dtype)
-    w = jax.random.normal(kw, (gemm.K, gemm.N), dtype)
-    if epilogue:
-        b = jnp.zeros((gemm.N,), dtype)
+    x = jax.random.normal(kx, (gemm.K, gemm.M) if trans_a else (gemm.M, gemm.K),
+                          dtype)
+    w = jax.random.normal(kw, (gemm.N, gemm.K) if trans_b else (gemm.K, gemm.N),
+                          dtype)
+    if sig is not None:
+        b = jnp.zeros((gemm.N,), dtype) if sig.bias else None
+        res = (jnp.zeros((gemm.M, gemm.N), dtype) if sig.residual else None)
         run = lambda: ops.flex_linear(
-            x, w, b, activation="gelu", dataflow=dataflow, block=block,
-            interpret=interpret,
+            x, w, b, activation=sig.activation, residual=res,
+            dataflow=dataflow, block=block, interpret=interpret,
+        )
+    elif via_copy:
+        # eager .T executes an HBM transpose copy on every timed call
+        run = lambda: ops.flex_matmul(
+            x.T if trans_a else x, w.T if trans_b else w,
+            dataflow=dataflow, block=block, interpret=interpret,
         )
     else:
         run = lambda: ops.flex_matmul(
-            x, w, dataflow=dataflow, block=block, interpret=interpret
+            x, w, dataflow=dataflow, block=block, interpret=interpret,
+            trans_a=trans_a, trans_b=trans_b,
         )
     for _ in range(warmup):
         run().block_until_ready()
@@ -312,25 +378,45 @@ def _tune_gemm(
     measure: bool,
     iters: int,
     interpret: bool,
-    epilogue: bool,
+    epilogue: "bool | EpilogueSig",
+    trans: tuple[bool, bool] = NO_TRANS,
 ) -> GemmPlan:
     """Tune one GEMM: analytical pruning, then real-execution timing of the
     ``top_k`` survivors (falls back to the analytical winner when the GEMM
-    is too large for interpret-mode timing or measurement is off)."""
+    is too large for interpret-mode timing or measurement is off).
+
+    ``trans`` marks a backward GEMM whose operands live in transposed
+    layout.  Each surviving (dataflow, block) is then timed **twice**: the
+    zero-copy transposed-operand variant, and the copy-based fallback with
+    its HBM transpose executed inside the timed region — so the ranking sees
+    the transpose traffic the old tuner (which timed pre-transposed
+    operands) never saw.  Analytically the zero-copy variant strictly
+    dominates (same kernel traffic, minus the copy), so it is the pick
+    whenever measurement is off.
+    """
     ranked = _ranked_candidates(gemm, vmem_limit)
     if not ranked:
         raise ValueError(f"no (dataflow, block) fits VMEM for {gemm}")
     measurable = measure and not (interpret and gemm.macs > MAX_INTERPRET_MACS)
     if measurable:
-        timed = [
-            (measure_kernel(gemm, df, blk, iters=iters,
-                            interpret=interpret, epilogue=epilogue), df, blk)
-            for _, df, blk in ranked[:top_k]
-        ]
-        cost, df, blk = min(timed, key=lambda t: t[0])
-        return GemmPlan(dataflow=df, block=blk, est_cost=cost, source="measured")
+        timed = []
+        for _, df, blk in ranked[:top_k]:
+            timed.append(
+                (measure_kernel(gemm, df, blk, iters=iters, interpret=interpret,
+                                epilogue=epilogue, trans=trans), trans, df, blk)
+            )
+            if trans != NO_TRANS:
+                timed.append(
+                    (measure_kernel(gemm, df, blk, iters=iters,
+                                    interpret=interpret, trans=trans,
+                                    via_copy=True), NO_TRANS, df, blk)
+                )
+        cost, tr, df, blk = min(timed, key=lambda t: t[0])
+        return GemmPlan(dataflow=df, block=blk, est_cost=cost,
+                        source="measured", trans=tr)
     cost, df, blk = ranked[0]
-    return GemmPlan(dataflow=df, block=blk, est_cost=cost, source="analytical")
+    return GemmPlan(dataflow=df, block=blk, est_cost=cost,
+                    source="analytical", trans=trans)
 
 
 def autotune_plan(
@@ -341,7 +427,7 @@ def autotune_plan(
     measure: bool = True,
     iters: int = 2,
     interpret: bool | None = None,
-    epilogue: bool = False,
+    epilogue: "bool | EpilogueSig | dict[str, EpilogueSig | None]" = False,
     train: bool = False,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
@@ -353,11 +439,18 @@ def autotune_plan(
     timing on CPU) the analytical winner is kept, marked
     ``source="analytical"`` so callers can tell which decisions were measured.
 
+    ``epilogue`` makes the forward measurements epilogue-aware: a bool
+    applies the same probe to every layer (legacy), while a dict maps layer
+    names to each layer's actual ``EpilogueSig`` — the serve/train drivers
+    pass ``model_epilogues(cfg)`` so every candidate is timed as the fused
+    op the model issues, not the bare matmul.
+
     With ``train=True`` each layer is planned as a **group of three GEMMs**:
-    the forward plus its two cotangent GEMMs (``bwd_gemms``), each tuned
-    independently (the backward epilogues are bare matmuls, so they are
-    measured without the fused epilogue).  The sub-plans land in
-    ``LayerPlan.bwd_dx`` / ``bwd_dw``.
+    the forward plus its two cotangent GEMMs (``bwd_gemms``).  The backward
+    sub-GEMMs are tuned over *both* operand layouts — the zero-copy
+    transposed-variant kernels and the copy-based fallback with its
+    transpose cost included (see ``_tune_gemm``) — and land in
+    ``LayerPlan.bwd_dx`` / ``bwd_dw`` with their winning ``trans``.
     """
     if interpret is None:
         from repro.kernels import ops
@@ -367,12 +460,13 @@ def autotune_plan(
               iters=iters, interpret=interpret)
     plan = DataflowPlan()
     for gemm in gemms:
-        fwd = _tune_gemm(gemm, epilogue=epilogue, **kw)
+        sig = epilogue.get(gemm.name) if isinstance(epilogue, dict) else epilogue
+        fwd = _tune_gemm(gemm, epilogue=sig or False, **kw)
         dx = dw = None
         if train:
             g_dx, g_dw = bwd_gemms(gemm)
-            dx = _tune_gemm(g_dx, epilogue=False, **kw)
-            dw = _tune_gemm(g_dw, epilogue=False, **kw)
+            dx = _tune_gemm(g_dx, epilogue=False, trans=TRANS_DX, **kw)
+            dw = _tune_gemm(g_dw, epilogue=False, trans=TRANS_DW, **kw)
         plan.layers.append(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
@@ -410,7 +504,8 @@ def add_bwd_subplans(
             continue
         g_dx, g_dw = bwd_gemms(l.gemm)
         out.layers.append(dataclasses.replace(
-            l, bwd_dx=_tune_gemm(g_dx, **kw), bwd_dw=_tune_gemm(g_dw, **kw)
+            l, bwd_dx=_tune_gemm(g_dx, trans=TRANS_DX, **kw),
+            bwd_dw=_tune_gemm(g_dw, trans=TRANS_DW, **kw)
         ))
     return out
 
@@ -437,6 +532,29 @@ def model_gemms(cfg, tokens: int) -> list[GemmShape]:
             gemms.append(GemmShape(M=tokens, K=D, N=cfg.d_ff, name="mlp.w3"))
     gemms.append(GemmShape(M=tokens, K=D, N=cfg.padded_vocab, name="lm_head"))
     return gemms
+
+
+def model_epilogues(cfg) -> dict[str, EpilogueSig]:
+    """Per-layer epilogue signatures matching what ``models.layers`` fuses
+    into each projection's kernel — keys mirror ``model_gemms``.  Passed as
+    ``autotune_plan(..., epilogue=...)`` so forward candidates are timed as
+    the ops the model actually issues (bias on q/k/v when ``qkv_bias``,
+    activation on mlp.w1, residual folded into attn.wo / mlp.w2)."""
+    qkv = EpilogueSig(bias=cfg.qkv_bias)
+    sigs = {
+        "attn.wq": qkv,
+        "attn.wk": qkv,
+        "attn.wv": qkv,
+        "attn.wo": EpilogueSig(residual=True),
+        "lm_head": EpilogueSig(),
+    }
+    if cfg.d_ff:
+        act = "silu" if cfg.activation == "silu" else "gelu"
+        sigs["mlp.w1"] = EpilogueSig(activation=act)
+        sigs["mlp.w2"] = EpilogueSig(residual=True)
+        if cfg.activation in ("silu", "gelu"):
+            sigs["mlp.w3"] = EpilogueSig()
+    return sigs
 
 
 def static_vs_flex_traffic(

@@ -17,13 +17,21 @@ Schema versions (see docs/autotune.md for the full JSON shape):
   * v1 — fwd-only rows: (name, M, K, N, dataflow, est_cost, block, source).
   * v2 — adds per-layer backward sub-plans ``bwd_dx`` / ``bwd_dw`` (each a
     {dataflow, block, est_cost, source} row, or null for fwd-only plans).
+  * v3 — each backward sub-plan additionally carries ``trans``, the
+    ``[trans_a, trans_b]`` operand layout its kernel runs with (the
+    zero-copy transposed-operand variant, or ``[false, false]`` when the
+    copy-based fallback measured faster).
 
-A v1 file still **loads** (its rows are a strict subset of v2; the backward
-sub-plans come back as None) — serving keeps working across the upgrade.
-Training, which needs the sub-plans, passes ``require_bwd=True`` to
-``load_or_autotune`` and a fwd-only cache is then re-tuned and overwritten,
-never silently half-applied.  Files from a *newer* schema than this build
-understands are rejected with a clear re-tune message.
+Older files still **load and migrate**: v1 rows are a strict subset (the
+backward sub-plans come back as None); v2 backward sub-plans — tuned on
+pre-transposed operands, so their (dataflow, block) remains valid for the
+same logical GEMM — are migrated to the zero-copy layout of their role
+(dX -> trans_b, dW -> trans_a), which never costs more than the copy path
+the v2 code actually ran.  Training, which needs the sub-plans, passes
+``require_bwd=True`` to ``load_or_autotune`` and a fwd-only cache is then
+re-tuned and overwritten, never silently half-applied.  Files from a
+*newer* schema than this build understands are rejected with a clear
+re-tune message.
 """
 
 from __future__ import annotations
@@ -31,11 +39,11 @@ from __future__ import annotations
 import json
 import os
 
-from .cmu import DataflowPlan, add_bwd_subplans, autotune_plan
+from .cmu import TRANS_DX, TRANS_DW, DataflowPlan, add_bwd_subplans, autotune_plan
 
-PLAN_CACHE_VERSION = 2
-# older schemas this build can still read (v1 rows are a subset of v2 rows)
-COMPATIBLE_VERSIONS = (1, 2)
+PLAN_CACHE_VERSION = 3
+# older schemas this build can still read and migrate
+COMPATIBLE_VERSIONS = (1, 2, 3)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -67,14 +75,39 @@ def load_plan(path: str) -> DataflowPlan:
             f"reads {COMPATIBLE_VERSIONS} — delete it and re-tune (or serve "
             "with a matching build)"
         )
+    layers = payload["layers"]
     if version < PLAN_CACHE_VERSION:
         import logging
 
+        migrated = _migrate_rows(layers, version)
         logging.getLogger(__name__).info(
-            "plan cache %s uses schema v%d; loaded as v%d (backward sub-plans "
-            "absent — training will re-tune)", path, version, PLAN_CACHE_VERSION,
+            "plan cache %s uses schema v%d; loaded as v%d (%s)",
+            path, version, PLAN_CACHE_VERSION,
+            f"{migrated} backward sub-plans migrated to zero-copy layouts"
+            if migrated else "backward sub-plans absent — training will re-tune",
         )
-    return DataflowPlan.from_json(json.dumps(payload["layers"]))
+    return DataflowPlan.from_json(json.dumps(layers))
+
+
+def _migrate_rows(layers: list[dict], version: int) -> int:
+    """In-place v1/v2 -> v3 row migration; returns migrated sub-plan count.
+
+    v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
+    the copy-based path minus the copy — their (dataflow, block) stays valid
+    for the same logical GEMM, and the zero-copy transposed-operand layout
+    runs that exact schedule without the HBM copy, so migration assigns each
+    role its zero-copy ``trans`` rather than pinning the old copy behaviour.
+    """
+    migrated = 0
+    if version >= 3:
+        return migrated
+    for row in layers:
+        for key, trans in (("bwd_dx", TRANS_DX), ("bwd_dw", TRANS_DW)):
+            sub = row.get(key)
+            if sub is not None and "trans" not in sub:
+                sub["trans"] = list(trans)
+                migrated += 1
+    return migrated
 
 
 def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False) -> bool:
@@ -102,6 +135,16 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     if path and os.path.exists(path):
         plan = load_plan(path)
         if plan_matches(plan, gemms, require_bwd=require_bwd):
+            if autotune_kw.get("epilogue"):
+                import logging
+
+                # shape-keyed staleness can't see *how* cached forward rows
+                # were measured; an old cache tuned bare is still honoured
+                logging.getLogger(__name__).info(
+                    "plan cache %s reused as-is; its forward decisions keep "
+                    "their original measurement probe — delete the file to "
+                    "re-tune with the current epilogue signatures", path,
+                )
             return plan, True
         import logging
 

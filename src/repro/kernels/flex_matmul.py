@@ -46,8 +46,23 @@ recomputing the forward GEMM in the backward pass).  The backward GEMMs
 themselves (``dX = dY @ W^T``, ``dW = X^T @ dY``) are plain flex matmuls
 issued by ``ops`` under their own CMU-planned (dataflow, block).
 
-**Block-shape constraints.**  Every kernel requires M, K, N to be exact
-multiples of (bm, bk, bn); ``ops.flex_matmul`` / ``ops.flex_linear`` pad and
+**Transposed operands (trans_a / trans_b).**  Every kernel accepts operands
+in transposed physical layout: with ``trans_a`` the first operand is stored
+``(K, M)`` and read as A^T, with ``trans_b`` the second is stored ``(N, K)``
+and read as B^T.  The transpose lives entirely in the BlockSpec index map
+(the block of logical ``A[i, k]`` is fetched from physical ``A[k, i]``) and
+the in-kernel ``dot_general`` dimension numbers — **no HBM transpose copy is
+ever issued**.  This is what lets the custom-VJP backward GEMMs
+``dX = dY @ W^T`` and ``dW = X^T @ dY`` stream W and X exactly as stored:
+dX streams W as (N,K)-logical, dW streams X as (K,M)-logical, zero copies.
+Stationarity is unchanged — the pinned operand's index map still ignores
+the innermost grid axis; only which physical axis maps to which grid index
+swaps.
+
+**Block-shape constraints.**  Every kernel requires the *logical* M, K, N to
+be exact multiples of (bm, bk, bn); transposed operands are blocked with the
+same (bm, bk, bn) applied to their physical axes — a ``trans_a`` operand is
+blocked ``(bk, bm)``.  ``ops.flex_matmul`` / ``ops.flex_linear`` pad and
 unpad around this.  Blocks should be MXU-aligned (multiples of 128, min 8
 sublanes); ``DEFAULT_BLOCK`` is (256, 256, 256).  ``bias`` is (1, N) and
 ``residual`` (M, N), blocked (1, bn) / (bm, bn).
@@ -113,8 +128,21 @@ def _epilogue(acc, bias_ref, res_ref, activation: str | None):
 # ---------------------------------------------------------------------------
 
 
+def _block_dot(a, b, trans_a: bool, trans_b: bool):
+    """One MAC on (possibly transposed-layout) operand blocks.
+
+    The transpose is expressed purely in the contraction dimension numbers —
+    a ``trans_a`` block is physically (bk, bm) and contracts axis 0, a
+    ``trans_b`` block is (bn, bk) and contracts axis 1 — so the MXU consumes
+    the block as stored and no relayout ever materialises.
+    """
+    dims = (((0 if trans_a else 1,), (1 if trans_b else 0,)), ((), ()))
+    return jax.lax.dot_general(a, b, dims, preferred_element_type=jnp.float32)
+
+
 def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
-               save_preact: bool = False):
+               save_preact: bool = False, trans_a: bool = False,
+               trans_b: bool = False):
     """Output-stationary: accumulate in VMEM scratch across the k grid axis.
 
     The fused epilogue runs in the ``_flush`` branch — the accumulator block
@@ -135,9 +163,7 @@ def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    )
+    acc_ref[...] += _block_dot(a_ref[...], b_ref[...], trans_a, trans_b)
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
@@ -148,7 +174,8 @@ def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
 
 
 def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
-                         has_res: bool, fused: bool, save_preact: bool = False):
+                         has_res: bool, fused: bool, save_preact: bool = False,
+                         trans_a: bool = False, trans_b: bool = False):
     """WS/IS shared body: one MAC into the HBM-streamed partial-sum block.
 
     The output block is revisited non-consecutively across the outer k axis,
@@ -182,8 +209,8 @@ def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
     def _init():
         part_ref[...] = jnp.zeros_like(part_ref)
 
-    part_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    part_ref[...] += _block_dot(
+        a_ref[...], b_ref[...], trans_a, trans_b
     ).astype(part_ref.dtype)
 
     if fused:
@@ -209,6 +236,34 @@ def _check(M: int, K: int, N: int, bm: int, bk: int, bn: int) -> None:
         )
 
 
+def _logical_dims(a, b, trans_a: bool, trans_b: bool) -> tuple[int, int, int]:
+    """(M, K, N) of ``op(a) @ op(b)`` given the physical operand layouts."""
+    M, K = a.shape[::-1] if trans_a else a.shape
+    K2, N = b.shape[::-1] if trans_b else b.shape
+    if K != K2:
+        raise ValueError(
+            f"inner dims mismatch: {a.shape} @ {b.shape} "
+            f"(trans_a={trans_a}, trans_b={trans_b})"
+        )
+    return M, K, N
+
+
+def _operand_specs(bm, bk, bn, a_map, b_map, trans_a: bool, trans_b: bool):
+    """BlockSpecs for A and B given *logical* index maps ``a_map`` (grid ids
+    -> (i, k) block coords) and ``b_map`` (-> (k, j)).  A transposed operand
+    gets the same logical map with its output pair swapped — the transpose
+    lives in the index map, never in HBM."""
+    if trans_a:
+        a_spec = pl.BlockSpec((bk, bm), lambda *ids: a_map(*ids)[::-1])
+    else:
+        a_spec = pl.BlockSpec((bm, bk), a_map)
+    if trans_b:
+        b_spec = pl.BlockSpec((bn, bk), lambda *ids: b_map(*ids)[::-1])
+    else:
+        b_spec = pl.BlockSpec((bk, bn), b_map)
+    return a_spec, b_spec
+
+
 def _epilogue_inputs(bias, res, bias_map, out_map, bm, bn):
     """Extra (arrays, specs) for whichever epilogue operands are present."""
     arrays, specs = [], []
@@ -232,10 +287,10 @@ def matmul_os(
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     interpret: bool = False,
     save_preact: bool = False,
+    trans_a: bool = False,
+    trans_b: bool = False,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
-    M, K = a.shape
-    K2, N = b.shape
-    assert K == K2
+    M, K, N = _logical_dims(a, b, trans_a, trans_b)
     bm, bk, bn = block
     _check(M, K, N, bm, bk, bn)
     grid = (M // bm, N // bn, K // bk)
@@ -243,10 +298,14 @@ def matmul_os(
     extra, extra_specs = _epilogue_inputs(
         bias, residual, lambda i, j, k: (0, j), out_map, bm, bn
     )
+    a_spec, b_spec = _operand_specs(
+        bm, bk, bn, lambda i, j, k: (i, k), lambda i, j, k: (k, j),
+        trans_a, trans_b,
+    )
     kern = functools.partial(
         _os_kernel, activation=activation,
         has_bias=bias is not None, has_res=residual is not None,
-        save_preact=save_preact,
+        save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
     )
     out_specs = pl.BlockSpec((bm, bn), out_map)
     out_shape = jax.ShapeDtypeStruct((M, N), out_dtype or jnp.float32)
@@ -256,11 +315,7 @@ def matmul_os(
     result = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            *extra_specs,
-        ],
+        in_specs=[a_spec, b_spec, *extra_specs],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[_VMEM((bm, bn), jnp.float32)],
@@ -284,28 +339,31 @@ def _matmul_stream(
     block: tuple[int, int, int],
     interpret: bool,
     save_preact: bool = False,
+    trans_a: bool = False,
+    trans_b: bool = False,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Shared WS/IS driver: aliased partial-sum accumulation over outer k."""
-    M, K = a.shape
-    _, N = b.shape
+    M, K, N = _logical_dims(a, b, trans_a, trans_b)
     bm, bk, bn = block
     _check(M, K, N, bm, bk, bn)
     if stationary == "weight":
-        # WS: grid (k, j, i) — B[k,j] constant across innermost i (pinned).
+        # WS: grid (k, j, i) — B[k,j] constant across innermost i (pinned;
+        # with trans_b the pinned physical block is B[j,k], still ignoring i).
         grid = (K // bk, N // bn, M // bm)
-        a_spec = pl.BlockSpec((bm, bk), lambda k, j, i: (i, k))
-        b_spec = pl.BlockSpec((bk, bn), lambda k, j, i: (k, j))
+        a_map = lambda k, j, i: (i, k)
+        b_map = lambda k, j, i: (k, j)
         c_map = lambda k, j, i: (i, j)
         bias_map = lambda k, j, i: (0, j)
     elif stationary == "input":
         # IS: grid (k, i, j) — A[i,k] constant across innermost j (pinned).
         grid = (K // bk, M // bm, N // bn)
-        a_spec = pl.BlockSpec((bm, bk), lambda k, i, j: (i, k))
-        b_spec = pl.BlockSpec((bk, bn), lambda k, i, j: (k, j))
+        a_map = lambda k, i, j: (i, k)
+        b_map = lambda k, i, j: (k, j)
         c_map = lambda k, i, j: (i, j)
         bias_map = lambda k, i, j: (0, j)
     else:  # pragma: no cover
         raise ValueError(stationary)
+    a_spec, b_spec = _operand_specs(bm, bk, bn, a_map, b_map, trans_a, trans_b)
     fused = (
         save_preact
         or bias is not None or residual is not None or activation is not None
@@ -327,7 +385,7 @@ def _matmul_stream(
     kern = functools.partial(
         _stream_accum_kernel, activation=activation,
         has_bias=bias is not None, has_res=residual is not None, fused=fused,
-        save_preact=save_preact,
+        save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
     )
     out_specs = pl.BlockSpec((bm, bn), c_map)
     out_shape = jax.ShapeDtypeStruct((M, N), jnp.float32)
@@ -376,9 +434,16 @@ def matmul(
     *,
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     interpret: bool = False,
+    trans_a: bool = False,
+    trans_b: bool = False,
 ) -> jax.Array:
-    """Flex matmul: same math, dataflow-selected block schedule."""
-    return KERNELS[dataflow](a, b, block=block, interpret=interpret)
+    """Flex matmul: same math, dataflow-selected block schedule.
+
+    ``trans_a`` / ``trans_b`` read the operands in transposed physical
+    layout via the index maps — ``op(a) @ op(b)`` with zero HBM copies.
+    """
+    return KERNELS[dataflow](a, b, block=block, interpret=interpret,
+                             trans_a=trans_a, trans_b=trans_b)
 
 
 def fused_matmul(
@@ -393,6 +458,8 @@ def fused_matmul(
     block: tuple[int, int, int] = DEFAULT_BLOCK,
     interpret: bool = False,
     save_preact: bool = False,
+    trans_a: bool = False,
+    trans_b: bool = False,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Matmul with the epilogue fused into the kernel's final flush.
 
@@ -400,11 +467,12 @@ def fused_matmul(
     (ops.flex_linear pads).  ``activation`` in {relu, gelu, silu, None}.
     With ``save_preact`` returns ``(out, z)`` where ``z`` is the f32
     pre-activation ``a @ b + bias`` — what the custom VJP saves.
+    ``trans_a`` / ``trans_b`` read transposed-layout operands in place.
     """
     if activation is not None and activation not in ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
     return KERNELS[dataflow](
         a, b, bias=bias, residual=residual, activation=activation,
         out_dtype=out_dtype, block=block, interpret=interpret,
-        save_preact=save_preact,
+        save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
     )

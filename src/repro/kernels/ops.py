@@ -25,6 +25,17 @@ takes ``bwd_dx`` / ``bwd_dw`` overrides from a CMU train plan (None means
 the trace-time roofline argmin); ``flex_matmul``'s backward always uses the
 trace-time argmin.
 
+**Transpose-free backward (default).**  The operand transposes above are
+expressed through the kernels' ``trans_a`` / ``trans_b`` index-map variants:
+dX streams W exactly as stored, (K, N) physical read as (N, K)-logical
+(``trans_b``), and dW streams X as stored, (M, K) physical read as
+(K, M)-logical (``trans_a``) — **no HBM transpose copy is ever issued**.  A
+``BwdSpec`` may carry an explicit third element ``(trans_a, trans_b)``; a
+CMU plan that *measured* the copy-based fallback as faster (it rarely is —
+the copy round-trips the operand through HBM) can program
+``(False, False)``, in which case the transpose is materialised exactly as
+the pre-v3 code did.
+
 Residual policy: **save, don't recompute**.  The forward kernel emits the
 f32 pre-activation ``z = x @ w + b`` as a second output (``save_preact``) —
 free for WS/IS whose staging buffer already materialises it, one extra f32
@@ -50,9 +61,12 @@ from repro.core.dataflow import Dataflow, GemmShape, best_kernel_dataflow
 
 from . import flex_matmul as fk
 
-# (dataflow, block) override for one backward GEMM, e.g. from a CMU plan:
-#   (Dataflow.WS, (256, 256, 256))  — block may be None for DEFAULT_BLOCK
-BwdSpec = tuple[Dataflow, "tuple[int, int, int] | None"]
+# Override for one backward GEMM, e.g. from a CMU plan:
+#   (Dataflow.WS, (256, 256, 256))                 — block None = DEFAULT_BLOCK
+#   (Dataflow.WS, (256, 256, 256), (False, True))  — explicit operand layout:
+#     the third element is (trans_a, trans_b); omitted means the role's
+#     zero-copy transposed-operand variant (the v3 default).
+BwdSpec = tuple  # (Dataflow, block | None[, (trans_a, trans_b)])
 
 
 def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -90,14 +104,20 @@ def _round_up_dim(d: int, mult: int = 128) -> int:
     return r
 
 
-def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int):
-    """Resolve one backward GEMM's (dataflow, block): the CMU plan's choice
-    when given, else the trace-time roofline argmin (shapes are static)."""
+def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int,
+                default_trans: tuple[bool, bool] = (False, False)):
+    """Resolve one backward GEMM's (dataflow, block, trans): the CMU plan's
+    choice when given, else the trace-time roofline argmin (shapes are
+    static).  ``default_trans`` is the role's zero-copy operand layout — a
+    2-tuple spec (legacy, pre-v3) inherits it; a 3-tuple spec states its own
+    (the CMU may have measured the copy-based fallback as faster)."""
     if spec is not None:
-        df, blk = spec
-        return df, tuple(blk) if blk else fk.DEFAULT_BLOCK
+        df, blk = spec[0], spec[1]
+        trans = tuple(spec[2]) if len(spec) > 2 and spec[2] is not None \
+            else default_trans
+        return df, tuple(blk) if blk else fk.DEFAULT_BLOCK, trans
     df, _ = best_kernel_dataflow(GemmShape(M=M, K=K, N=N))
-    return df, fk.DEFAULT_BLOCK
+    return df, fk.DEFAULT_BLOCK, default_trans
 
 
 # ---------------------------------------------------------------------------
@@ -105,14 +125,20 @@ def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int):
 # ---------------------------------------------------------------------------
 
 
-def _matmul_run(a, b, dataflow, block, interpret, out_dtype):
-    """Primal blocked matmul: pad -> flex kernel -> unpad -> cast."""
-    M, K = a.shape
-    _, N = b.shape
+def _matmul_run(a, b, dataflow, block, interpret, out_dtype,
+                trans_a: bool = False, trans_b: bool = False):
+    """Primal blocked matmul: pad -> flex kernel -> unpad -> cast.
+
+    With ``trans_a`` / ``trans_b`` the operands are in transposed physical
+    layout ((K, M) / (N, K)); padding follows the physical axes and the
+    kernel reads them through the transposed index maps — no copy.
+    """
+    M, K, N = fk._logical_dims(a, b, trans_a, trans_b)
     bm, bk, bn = _fit_block(M, K, N, block)
-    ap = _pad_to(a, bm, bk)
-    bp = _pad_to(b, bk, bn)
-    out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret)
+    ap = _pad_to(a, bk, bm) if trans_a else _pad_to(a, bm, bk)
+    bp = _pad_to(b, bn, bk) if trans_b else _pad_to(b, bk, bn)
+    out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret,
+                    trans_a=trans_a, trans_b=trans_b)
     out = out[:M, :N]
     return out.astype(out_dtype or jnp.promote_types(a.dtype, b.dtype))
 
@@ -127,16 +153,33 @@ def _matmul_fwd(cfg, a, b):
 
 
 def _matmul_bwd(cfg, residuals, g):
-    dataflow, block, interpret, out_dtype = cfg
+    dataflow, block, interpret, out_dtype, trans_a, trans_b = cfg
     a, b = residuals
-    M, K = a.shape
-    N = b.shape[1]
-    # dA = g @ B^T is an (M,N)x(N,K) GEMM; dB = A^T @ g is (K,M)x(M,N) —
-    # each gets its own trace-time dataflow pick (shapes differ from fwd).
-    df_da, blk_da = _bwd_choice(None, M, N, K)
-    df_db, blk_db = _bwd_choice(None, K, M, N)
-    da = _matmul_run(g, b.T, df_da, blk_da, interpret, a.dtype)
-    db = _matmul_run(a.T, g, df_db, blk_db, interpret, b.dtype)
+    M, K, N = fk._logical_dims(a, b, trans_a, trans_b)
+    # With A' = op(A), B' = op(B):  dA' = g @ B'^T  and  dB' = A'^T @ g.
+    # Each cotangent is issued directly in its operand's *stored* layout —
+    # the trans flags below are the algebra of op() folded into the index
+    # maps, so no combination of flags ever materialises a transpose.
+    if trans_a:
+        # dA (stored (K, M)) = B' @ g^T — a (K,N)x(N,M) GEMM.
+        df, blk, _ = _bwd_choice(None, K, N, M)
+        da = _matmul_run(b, g, df, blk, interpret, a.dtype,
+                         trans_a=trans_b, trans_b=True)
+    else:
+        # dA = g @ B'^T — an (M,N)x(N,K) GEMM; B'^T reads stored B directly.
+        df, blk, _ = _bwd_choice(None, M, N, K)
+        da = _matmul_run(g, b, df, blk, interpret, a.dtype,
+                         trans_b=not trans_b)
+    if trans_b:
+        # dB (stored (N, K)) = g^T @ A' — an (N,M)x(M,K) GEMM.
+        df, blk, _ = _bwd_choice(None, N, M, K)
+        db = _matmul_run(g, a, df, blk, interpret, b.dtype,
+                         trans_a=True, trans_b=trans_a)
+    else:
+        # dB = A'^T @ g — a (K,M)x(M,N) GEMM; A'^T reads stored A directly.
+        df, blk, _ = _bwd_choice(None, K, M, N)
+        db = _matmul_run(a, g, df, blk, interpret, b.dtype,
+                         trans_a=not trans_a)
     return da, db
 
 
@@ -144,7 +187,8 @@ _matmul_core.defvjp(_matmul_fwd, _matmul_bwd)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype")
+    jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype",
+                              "trans_a", "trans_b")
 )
 def flex_matmul(
     a: jax.Array,
@@ -153,17 +197,21 @@ def flex_matmul(
     block: tuple[int, int, int] = fk.DEFAULT_BLOCK,
     interpret: bool = False,
     out_dtype: jnp.dtype | None = None,
+    trans_a: bool = False,
+    trans_b: bool = False,
 ) -> jax.Array:
-    """C = A @ B under the given dataflow; pads/unpads to block multiples.
+    """C = op(A) @ op(B) under the given dataflow; pads/unpads to block
+    multiples.  ``trans_a`` / ``trans_b`` read the operands in transposed
+    physical layout through the kernels' index maps — zero HBM copies.
 
     Differentiable: ``jax.grad`` routes both cotangent GEMMs back through
-    the flex kernels (see the module docstring's VJP contract).
+    the flex kernels, themselves transpose-free for every flag combination
+    (see the module docstring's VJP contract).
     """
-    M, K = a.shape
-    K2, N = b.shape
-    if K != K2:
-        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
-    return _matmul_core((dataflow, block, interpret, out_dtype), a, b)
+    fk._logical_dims(a, b, trans_a, trans_b)  # validates the inner dims
+    return _matmul_core(
+        (dataflow, block, interpret, out_dtype, trans_a, trans_b), a, b
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -234,12 +282,18 @@ def _linear_bwd(cfg: _LinearCfg, residuals, g):
         dz = act_vjp(g32)[0]
     else:
         dz = g32
-    # the two backward GEMMs, each under its own CMU-planned dataflow
-    df_dx, blk_dx = _bwd_choice(cfg.bwd_dx, M, N, K)
-    df_dw, blk_dw = _bwd_choice(cfg.bwd_dw, K, M, N)
+    # The two backward GEMMs, each under its own CMU-planned (dataflow,
+    # block, operand layout).  Default layouts are the zero-copy variants:
+    # dX streams W as stored via trans_b, dW streams X as stored via
+    # trans_a.  A plan that measured the copy-based fallback as faster
+    # programs (False, False) and the transpose is materialised explicitly.
+    df_dx, blk_dx, tr_dx = _bwd_choice(cfg.bwd_dx, M, N, K, (False, True))
+    df_dw, blk_dw, tr_dw = _bwd_choice(cfg.bwd_dw, K, M, N, (True, False))
     gd = dz.astype(jnp.promote_types(x.dtype, w.dtype))
-    dx = _matmul_run(gd, w.T, df_dx, blk_dx, cfg.interpret, x.dtype)
-    dw = _matmul_run(x.T, gd, df_dw, blk_dw, cfg.interpret, w.dtype)
+    dx = _matmul_run(gd, w if tr_dx[1] else w.T, df_dx, blk_dx,
+                     cfg.interpret, x.dtype, trans_b=tr_dx[1])
+    dw = _matmul_run(x if tr_dw[0] else x.T, gd, df_dw, blk_dw,
+                     cfg.interpret, w.dtype, trans_a=tr_dw[0])
     if b_proto is None:
         db = None
     else:
@@ -281,10 +335,15 @@ def flex_linear(
 
     Differentiable end-to-end: under ``jax.grad`` the backward GEMMs
     ``dX = dY @ W^T`` and ``dW = X^T @ dY`` run as flex kernels under
-    ``bwd_dx`` / ``bwd_dw`` — ``(Dataflow, (bm, bk, bn))`` tuples, normally
-    supplied by the CMU train plan — or the trace-time roofline argmin when
-    None.  The activation gradient uses the pre-activation the forward
-    kernel saved (see module docstring for the save-vs-recompute policy).
+    ``bwd_dx`` / ``bwd_dw`` — ``(Dataflow, (bm, bk, bn), (trans_a,
+    trans_b))`` tuples, normally supplied by the CMU train plan — or the
+    trace-time roofline argmin when None.  The third element is the operand
+    layout: omitted (legacy 2-tuples) or the role's default means the
+    zero-copy transposed-operand kernel that streams W/X as stored;
+    ``(False, False)`` forces the copy-based fallback that materialises the
+    transpose in HBM first.  The activation gradient uses the
+    pre-activation the forward kernel saved (see module docstring for the
+    save-vs-recompute policy).
 
     Examples (interpret mode, so they run anywhere):
 

@@ -121,16 +121,26 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     with ``use_pallas``.  With ``train=True`` the plan must carry per-layer
     backward sub-plans (the fwd + dX + dW group) — a fwd-only cache is
     re-tuned, so ``--pallas`` training never runs unplanned backward GEMMs.
+    Forward candidates are measured with each layer's actual fused-epilogue
+    signature (``model_epilogues``), so the tuner times the op the model
+    issues rather than the bare matmul.
     Returns the plan (or None when no path given).
     """
     if not path:
         return None
     import logging
 
-    from repro.core import activate_plan, load_or_autotune, model_gemms
+    from repro.core import (
+        activate_plan,
+        load_or_autotune,
+        model_epilogues,
+        model_gemms,
+    )
 
     gemms = model_gemms(cfg, tokens)
-    plan, loaded = load_or_autotune(path, gemms, require_bwd=train, measure=measure)
+    plan, loaded = load_or_autotune(path, gemms, require_bwd=train,
+                                    measure=measure,
+                                    epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
     logging.getLogger(__name__).info(

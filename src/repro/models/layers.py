@@ -62,9 +62,9 @@ def linear(
         if lp is not None:
             df, blk = lp.dataflow, lp.block or DEFAULT_BLOCK
             if lp.bwd_dx is not None:
-                bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block)
+                bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block, lp.bwd_dx.trans)
             if lp.bwd_dw is not None:
-                bwd_dw = (lp.bwd_dw.dataflow, lp.bwd_dw.block)
+                bwd_dw = (lp.bwd_dw.dataflow, lp.bwd_dw.block, lp.bwd_dw.trans)
         else:
             df, _ = best_kernel_dataflow(GemmShape(x2.shape[0], K, N, name=name))
             blk = DEFAULT_BLOCK

@@ -6,6 +6,7 @@ end-to-end check of the custom VJP + train-plan wiring from the benchmark's
 angle (plan -> bwd_dx/bwd_dw specs -> value_and_grad).
 """
 
+import json
 import os
 import runpy
 import sys
@@ -13,9 +14,31 @@ import sys
 BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "train_step.py")
 
 
-def test_train_step_benchmark_dry_run(monkeypatch, capsys):
-    monkeypatch.setattr(sys, "argv", [BENCH, "--dry-run"])
+def test_train_step_benchmark_dry_run(monkeypatch, capsys, tmp_path):
+    out_json = str(tmp_path / "bench.json")
+    monkeypatch.setattr(sys, "argv", [BENCH, "--dry-run", "--json", out_json])
     runpy.run_path(BENCH, run_name="__main__")
     out = capsys.readouterr().out
     assert "gradients match the XLA reference" in out
     assert "dry-run OK" in out
+    with open(out_json) as f:
+        record = json.load(f)
+    assert set(record["walltime_s"]) == {"pallas", "pallas_copy_bwd", "xla"}
+    # the copy path must be charged its transpose round-trip in the estimate
+    est = record["hbm_bytes_est"]
+    assert est["bwd_via_copy"] > est["bwd_transpose_free"] > 0
+    for layer in record["layers"]:
+        assert "trans" in layer["dx"] and "trans" in layer["dw"]
+
+
+def test_checked_in_bench_baseline_is_consistent():
+    """BENCH_train_step.json (the trajectory baseline) stays parseable and
+    structurally in sync with what --json emits today."""
+    path = os.path.join(os.path.dirname(BENCH), "BENCH_train_step.json")
+    with open(path) as f:
+        record = json.load(f)
+    assert record["config"]["interpret"] is True
+    est = record["hbm_bytes_est"]
+    assert est["bwd_via_copy"] > est["bwd_transpose_free"] > 0
+    for layer in record["layers"]:
+        assert set(layer) == {"name", "gemm", "fwd", "dx", "dw"}
