@@ -61,7 +61,7 @@ def main() -> None:
         def fused():
             return flex_linear(x, w, b, activation="gelu", residual=r,
                                dataflow=lp.dataflow, block=lp.block,
-                               interpret=True)
+                               strip=lp.strip, interpret=True)
 
         def unfused():
             return linear_ref(x, w, b, activation="gelu", residual=r)

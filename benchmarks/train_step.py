@@ -2,51 +2,76 @@
 flex kernels' custom VJP vs the XLA reference path.
 
 Per layer the CMU train plan programs THREE decisions — forward,
-dX = dY @ W^T, dW = X^T @ dY, each a (dataflow, block, operand-layout)
-triple — and this benchmark reports all of them next to the measured step
-walltimes.  The backward GEMMs run **transpose-free** by default (the
-kernels stream W and X as stored through transposed index maps); the
-``copy-bwd`` column forces the pre-v3 behaviour (materialise ``w.T`` /
-``x.T`` in HBM before each backward kernel) so the trajectory of the
-transpose-free win stays visible.  On CPU the kernels run in Pallas
-interpret mode, so walltimes are dispatch sanity checks, not TPU
-performance; the HBM-bytes column is the analytical estimate the CMU ranks
-with.  ``--json`` writes the full record (see BENCH_train_step.json for the
+dX = dY @ W^T, dW = X^T @ dY, each a (dataflow, block, operand-layout,
+strip) quadruple — and this benchmark reports all of them next to the
+measured step walltimes.  Two ablation columns track the schedule-space
+history:
+
+* ``copy-bwd`` forces the pre-v3 backward behaviour (materialise ``w.T`` /
+  ``x.T`` in HBM before each backward kernel);
+* ``streamed`` forces every decision's strip to 1, i.e. the pre-v4 WS/IS
+  schedules whose partial sums round-trip through HBM.
+
+On CPU the kernels run in Pallas interpret mode, so walltimes are dispatch
+sanity checks, not TPU performance; the HBM-bytes columns are the
+analytical estimates the CMU ranks with, and ``--verify-traffic`` asserts
+they agree with a walk over the exact kernel grids/index maps
+(``kernels.flex_matmul.schedule_cost_bytes``) — the CI perf smoke.
+``--json`` writes the full record (see BENCH_train_step.json for the
 checked-in baseline).
 
   PYTHONPATH=src python benchmarks/train_step.py [--tokens 256] [--iters 3]
   PYTHONPATH=src python benchmarks/train_step.py --json out.json
   PYTHONPATH=src python benchmarks/train_step.py --dry-run   # CI smoke
+  PYTHONPATH=src python benchmarks/train_step.py --verify-traffic
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import NO_TRANS, GemmShape, autotune_plan, bwd_gemms, hbm_traffic_bytes
+import repro.kernels  # noqa: F401  — materialises the kernel submodules
+from repro.core import (
+    NO_TRANS,
+    ALL_DATAFLOWS,
+    Dataflow,
+    GemmShape,
+    autotune_plan,
+    bwd_gemms,
+    hbm_traffic_bytes,
+    strip_blocks,
+    strip_candidates,
+)
 from repro.kernels import DEFAULT_BLOCK, flex_linear, linear_ref
 
+fk = sys.modules["repro.kernels.flex_matmul"]
 
-def _bwd_spec(sub, force_copy: bool = False):
+
+def _bwd_spec(sub, force_copy: bool = False, force_streamed: bool = False):
     if sub is None:
         return None
     trans = NO_TRANS if force_copy else sub.trans
-    return (sub.dataflow, sub.block, trans)
+    strip = 1 if force_streamed else sub.strip
+    return (sub.dataflow, sub.block, trans, strip)
 
 
-def build_losses(plan, interpret: bool, force_copy_bwd: bool = False):
+def build_losses(plan, interpret: bool, force_copy_bwd: bool = False,
+                 force_streamed: bool = False):
     """(pallas_loss, ref_loss) over a gated-MLP block: w1 -> gelu -> w2 (+res).
 
     The pallas loss dispatches every GEMM — forward and, via the custom VJP,
     backward — per the train plan's sub-plans.  ``force_copy_bwd`` overrides
     every backward sub-plan's operand layout to (False, False), i.e. the
     copy-based fallback that materialises the transposed operand in HBM.
+    ``force_streamed`` overrides every strip to 1 — the pre-v4 schedules
+    whose WS/IS partial sums stream through HBM.
     """
     by_name = {lp.name: lp for lp in plan.layers}
 
@@ -60,8 +85,9 @@ def build_losses(plan, interpret: bool, force_copy_bwd: bool = False):
             h = flex_linear(
                 h, w, b, activation=act, residual=res,
                 dataflow=lp.dataflow, block=lp.block, interpret=interpret,
-                bwd_dx=_bwd_spec(lp.bwd_dx, force_copy_bwd),
-                bwd_dw=_bwd_spec(lp.bwd_dw, force_copy_bwd),
+                strip=1 if force_streamed else lp.strip,
+                bwd_dx=_bwd_spec(lp.bwd_dx, force_copy_bwd, force_streamed),
+                bwd_dw=_bwd_spec(lp.bwd_dw, force_copy_bwd, force_streamed),
             )
         return (h * h).mean()
 
@@ -93,10 +119,124 @@ def bwd_hbm_bytes(plan) -> dict[str, int]:
                                (g_dw, lp.bwd_dw, g_dw.M * g_dw.K)):
             assert sub is not None, "bwd_hbm_bytes needs a train=True plan"
             blk = sub.block or DEFAULT_BLOCK
-            kernel += hbm_traffic_bytes(g, sub.dataflow, *blk,
-                                        in_bytes=4).hbm_bytes
+            kernel += hbm_traffic_bytes(g, sub.dataflow, *blk, in_bytes=4,
+                                        strip=sub.strip).hbm_bytes
             copy_extra += 2 * copied * 4  # f32 read + write of the copy
     return {"bwd_transpose_free": kernel, "bwd_via_copy": kernel + copy_extra}
+
+
+def strip_hbm_bytes(plan) -> dict[str, int]:
+    """Total analytical HBM bytes of every GEMM the plan dispatches (fwd +
+    dX + dW), under the plan's strips vs forced strip=1 streaming — the
+    partial-sum round-trips the two-level schedules eliminate."""
+
+    def total(forced_streamed: bool) -> int:
+        bytes_ = 0
+        for lp in plan.layers:
+            g_dx, g_dw = bwd_gemms(lp.gemm)
+            for g, df, blk, strip in (
+                (lp.gemm, lp.dataflow, lp.block, lp.strip),
+                (g_dx, lp.bwd_dx.dataflow, lp.bwd_dx.block, lp.bwd_dx.strip),
+                (g_dw, lp.bwd_dw.dataflow, lp.bwd_dw.block, lp.bwd_dw.strip),
+            ):
+                blk = blk or DEFAULT_BLOCK
+                bytes_ += hbm_traffic_bytes(
+                    g, df, *blk, in_bytes=4,
+                    strip=1 if forced_streamed else strip,
+                ).hbm_bytes
+        return bytes_
+
+    return {"plan_strips": total(False), "forced_streamed": total(True)}
+
+
+# Training-scale GEMMs where K spans many blocks and no single-block bk
+# fits the VMEM budget, so every streamed WS/IS schedule pays (2Kb-1)
+# output round-trips.  The dW GEMMs are the canonical case — their
+# contraction axis is the token count.
+STRIP_SHOWCASE = [
+    GemmShape(65_536, 2048, 8192, name="mlp.w1@64k-tokens"),
+    GemmShape(2048, 65_536, 8192, name="mlp.w1.dw"),
+    GemmShape(8192, 65_536, 2048, name="mlp.w2.dw"),
+]
+
+
+def strip_showcase(shapes: list[GemmShape] = STRIP_SHOWCASE) -> list[dict]:
+    """Analytical streamed-vs-strip comparison on strip-feasible shapes.
+
+    Three schedules per GEMM: the best overall (dataflow, block, strip),
+    the best *streamed* WS/IS schedule — the pre-v4 kernels, paying
+    (2Kb-1) partial-sum round-trips — and the best OS schedule.  The point
+    of the strip redesign is visible in the columns: streamed WS/IS lose
+    to OS by the partial-sum term alone (an artifact of the grid order),
+    while the strip schedules eliminate exactly that term and close the
+    gap to the a+b+c traffic floor.  Analytically strips and OS then tie
+    (a strip spends its VMEM on depth where OS spends it on block area —
+    the same trade), so which stationarity actually runs falls to the
+    *measured* pass, the paper's per-layer argument, instead of being
+    decided by a schedule artifact.
+    """
+    from repro.core import VMEM_BUDGET_BYTES
+    from repro.core.cmu import _ranked_candidates
+
+    rows = []
+    for g in shapes:
+        ranked = _ranked_candidates(g, VMEM_BUDGET_BYTES)
+
+        def entry(pred):
+            t, df, blk, strip = next(r for r in ranked if pred(*r))
+            cost = hbm_traffic_bytes(g, df, *blk, strip=strip)
+            kb = -(-g.K // blk[1])
+            partials = ((2 * kb - 2) * g.M * g.N * 4
+                        if df is not Dataflow.OS and strip == 1 and kb > 1
+                        else 0)
+            return {"dataflow": df.name, "block": list(blk), "strip": strip,
+                    "hbm_bytes": cost.hbm_bytes,
+                    "partial_rw_bytes": partials}
+
+        rows.append({
+            "gemm": [g.M, g.K, g.N], "name": g.name,
+            "best": entry(lambda t, df, blk, s: True),
+            "best_streamed_wsis": entry(
+                lambda t, df, blk, s: s == 1 and df is not Dataflow.OS),
+            "best_os": entry(lambda t, df, blk, s: df is Dataflow.OS),
+        })
+    return rows
+
+
+def verify_traffic(shapes: list[GemmShape]) -> int:
+    """Assert the strip-aware analytical model agrees with a walk over the
+    exact grids/index maps the kernels emit (Pallas revisiting semantics):
+    byte-for-byte when every dim spans >= 2 blocks, an upper bound on
+    degenerate axes.  Returns the number of (dataflow, block, strip)
+    schedules checked.  This is the CI perf-smoke guard that the CMU ranks
+    schedules by what the kernels actually do.
+    """
+    checked = 0
+    for g in shapes:
+        for df in ALL_DATAFLOWS:
+            for blk in [(64, 64, 64), (128, 64, 128)]:
+                bm, bk, bn = blk
+                # the kernels run on the padded geometry (ops pads to block
+                # multiples), so the model is compared on the padded shape —
+                # that is the traffic the schedule actually moves
+                padded = GemmShape(-(-g.M // bm) * bm, -(-g.K // bk) * bk,
+                                   -(-g.N // bn) * bn)
+                strips = [1] if df is Dataflow.OS else strip_candidates(
+                    strip_blocks(padded, df, bm, bn))
+                exact = all(d >= 2 * b for d, b in
+                            zip((padded.M, padded.K, padded.N), blk))
+                for strip in strips:
+                    walk = fk.schedule_cost_bytes(df, g.M, g.K, g.N, blk,
+                                                  strip=strip, in_bytes=4,
+                                                  out_bytes=4)
+                    model = hbm_traffic_bytes(padded, df, bm, bk, bn,
+                                              in_bytes=4, strip=strip).hbm_bytes
+                    if exact:
+                        assert walk == model, (g, df, blk, strip, walk, model)
+                    else:
+                        assert walk <= model, (g, df, blk, strip, walk, model)
+                    checked += 1
+    return checked
 
 
 def _timeit(fn, *args) -> float:
@@ -115,21 +255,37 @@ def main() -> None:
                     help="write the full benchmark record as JSON")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny shapes, 1 iter, grad-correctness assert (CI smoke)")
+    ap.add_argument("--verify-traffic", action="store_true",
+                    help="assert the analytical strip model matches the "
+                         "kernel schedule walk, then exit (CI perf smoke)")
     args = ap.parse_args()
     if args.dry_run:
         args.tokens, args.d_model, args.d_ff, args.iters = 64, 64, 128, 1
 
     T, D, F = args.tokens, args.d_model, args.d_ff
     gemms = [GemmShape(T, D, F, name="mlp.w1"), GemmShape(T, F, D, name="mlp.w2")]
+
+    if args.verify_traffic:
+        shapes = gemms + [g for gm in gemms for g in bwd_gemms(gm)]
+        n = verify_traffic(shapes)
+        print(f"traffic model OK: analytical bytes match the kernel schedule "
+              f"walk on {n} (dataflow, block, strip) schedules")
+        return
+
     plan = autotune_plan(gemms, top_k=2, iters=1, train=True)
 
-    print(f"{'layer':8} {'gemm (M,K,N)':>18} {'fwd':>4} {'dX':>8} {'dW':>8}")
+    print(f"{'layer':8} {'gemm (M,K,N)':>18} {'fwd':>7} {'dX':>9} {'dW':>9}")
     for lp in plan.layers:
         g = lp.gemm
-        dx_tag = lp.bwd_dx.dataflow.name + ("" if lp.bwd_dx.trans == (False, False) else "/T")
-        dw_tag = lp.bwd_dw.dataflow.name + ("" if lp.bwd_dw.trans == (False, False) else "/T")
+
+        def tag(df, trans, strip):
+            t = df.name + ("" if trans == (False, False) else "/T")
+            return t + (f"/s{strip}" if strip > 1 else "")
+
         print(f"{lp.name:8} {f'({g.M},{g.K},{g.N})':>18} "
-              f"{lp.dataflow.name:>4} {dx_tag:>8} {dw_tag:>8}")
+              f"{tag(lp.dataflow, NO_TRANS, lp.strip):>7} "
+              f"{tag(lp.bwd_dx.dataflow, lp.bwd_dx.trans, lp.bwd_dx.strip):>9} "
+              f"{tag(lp.bwd_dw.dataflow, lp.bwd_dw.trans, lp.bwd_dw.strip):>9}")
 
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(T, D)) * 0.1, jnp.float32)
@@ -142,30 +298,59 @@ def main() -> None:
 
     pallas_loss, ref_loss = build_losses(plan, interpret=True)
     copy_loss, _ = build_losses(plan, interpret=True, force_copy_bwd=True)
+    stream_loss, _ = build_losses(plan, interpret=True, force_streamed=True)
     pallas_step = jax.jit(jax.value_and_grad(pallas_loss))
     copy_step = jax.jit(jax.value_and_grad(copy_loss))
+    stream_step = jax.jit(jax.value_and_grad(stream_loss))
     ref_step = jax.jit(jax.value_and_grad(ref_loss))
 
     (lp_, gp), (lr, gr) = pallas_step(params, x), ref_step(params, x)
     (lc, gc) = copy_step(params, x)
+    (ls, gs) = stream_step(params, x)
     np.testing.assert_allclose(float(lp_), float(lr), atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(float(lc), float(lr), atol=1e-5, rtol=1e-5)
+    # strip schedules change residency, never math: bit-identical to streamed
+    np.testing.assert_array_equal(np.asarray(lp_), np.asarray(ls))
     for k in params:
         np.testing.assert_allclose(np.asarray(gp[k][0]), np.asarray(gr[k][0]),
                                    atol=2e-4, rtol=2e-4)
         np.testing.assert_allclose(np.asarray(gc[k][0]), np.asarray(gr[k][0]),
                                    atol=2e-4, rtol=2e-4)
-    print("fwd+bwd gradients match the XLA reference (transpose-free and copy bwd)")
+        np.testing.assert_array_equal(np.asarray(gp[k][0]), np.asarray(gs[k][0]))
+    print("fwd+bwd gradients match the XLA reference (transpose-free and "
+          "copy bwd); strip schedules bit-identical to streamed")
+    if args.dry_run:
+        n = verify_traffic(gemms + [g for gm in gemms for g in bwd_gemms(gm)])
+        print(f"traffic model OK ({n} schedules)")
 
     tp = min(_timeit(pallas_step, params, x) for _ in range(args.iters))
     tc = min(_timeit(copy_step, params, x) for _ in range(args.iters))
+    ts = min(_timeit(stream_step, params, x) for _ in range(args.iters))
     tr = min(_timeit(ref_step, params, x) for _ in range(args.iters))
     hbm = bwd_hbm_bytes(plan)
+    strips = strip_hbm_bytes(plan)
     print(f"step walltime: pallas {tp*1e3:8.2f} ms ({T/tp:10,.0f} tok/s)   "
-          f"copy-bwd {tc*1e3:8.2f} ms   xla {tr*1e3:8.2f} ms ({T/tr:10,.0f} tok/s)")
+          f"streamed {ts*1e3:8.2f} ms   copy-bwd {tc*1e3:8.2f} ms   "
+          f"xla {tr*1e3:8.2f} ms ({T/tr:10,.0f} tok/s)")
     print(f"bwd HBM bytes (analytical): transpose-free {hbm['bwd_transpose_free']:,} "
           f"vs via-copy {hbm['bwd_via_copy']:,} "
           f"({hbm['bwd_via_copy'] / hbm['bwd_transpose_free']:.2f}x)")
+    print(f"plan HBM bytes (analytical, fwd+dX+dW): strips {strips['plan_strips']:,} "
+          f"vs streamed {strips['forced_streamed']:,} "
+          f"({strips['forced_streamed'] / strips['plan_strips']:.2f}x)")
+
+    showcase = strip_showcase()
+    print("strip showcase (training-scale shapes, analytical HBM bytes):")
+    for row in showcase:
+        b = row["best"]
+        s = row["best_streamed_wsis"]
+        o = row["best_os"]
+        print(f"  {row['name']:18} {str(tuple(row['gemm'])):>21} "
+              f"best {b['dataflow']}/s{b['strip']} {b['hbm_bytes']:>14,} B | "
+              f"streamed {s['dataflow']} {s['hbm_bytes']:>14,} B "
+              f"({s['hbm_bytes'] / b['hbm_bytes']:.2f}x, partial rw "
+              f"{s['partial_rw_bytes']:,} B) | "
+              f"OS {o['hbm_bytes']:>14,} B")
 
     if args.json:
         record = {
@@ -176,14 +361,17 @@ def main() -> None:
                     "name": lp.name,
                     "gemm": [lp.gemm.M, lp.gemm.K, lp.gemm.N],
                     "fwd": {"dataflow": lp.dataflow.name,
-                            "block": list(lp.block) if lp.block else None},
+                            "block": list(lp.block) if lp.block else None,
+                            "strip": lp.strip},
                     "dx": lp.bwd_dx.to_row(),
                     "dw": lp.bwd_dw.to_row(),
                 }
                 for lp in plan.layers
             ],
-            "walltime_s": {"pallas": tp, "pallas_copy_bwd": tc, "xla": tr},
-            "hbm_bytes_est": hbm,
+            "walltime_s": {"pallas": tp, "pallas_streamed": ts,
+                           "pallas_copy_bwd": tc, "xla": tr},
+            "hbm_bytes_est": {**hbm, **strips},
+            "strip_showcase": showcase,
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)

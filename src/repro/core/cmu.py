@@ -44,12 +44,15 @@ from typing import NamedTuple
 
 from .dataflow import (
     ALL_DATAFLOWS,
+    VMEM_BUDGET_BYTES,
     ConvLayer,
     Dataflow,
     GemmShape,
     best_kernel_dataflow,
     hbm_traffic_bytes,
     kernel_block_candidates,
+    strip_blocks,
+    strip_candidates,
     systolic_cycles,
     tune_kernel_dataflow,
 )
@@ -86,17 +89,21 @@ NO_TRANS = (False, False)
 
 @dataclass(frozen=True)
 class GemmPlan:
-    """One (dataflow, block, operand-layout) decision for a single GEMM —
-    the unit the CMU programs.  Used for the backward sub-plans carried by
-    ``LayerPlan``.  ``trans`` is the ``(trans_a, trans_b)`` the kernel runs
-    with: the zero-copy transposed-operand variant for backward GEMMs, or
-    ``(False, False)`` when the copy-based fallback measured faster."""
+    """One (dataflow, block, operand-layout, strip) decision for a single
+    GEMM — the unit the CMU programs.  Used for the backward sub-plans
+    carried by ``LayerPlan``.  ``trans`` is the ``(trans_a, trans_b)`` the
+    kernel runs with: the zero-copy transposed-operand variant for backward
+    GEMMs, or ``(False, False)`` when the copy-based fallback measured
+    faster.  ``strip`` is the WS/IS accumulator-strip depth: 1 streams
+    partial sums through HBM (the pre-v4 schedule, and the only OS value);
+    >= 2 pins a VMEM-resident strip so partials never leave the chip."""
 
     dataflow: Dataflow
     block: tuple[int, int, int] | None
     est_cost: float
     source: str = "analytical"  # "analytical" | "measured"
     trans: tuple[bool, bool] = NO_TRANS
+    strip: int = 1
 
     def to_row(self) -> dict:
         return {
@@ -105,6 +112,7 @@ class GemmPlan:
             "est_cost": self.est_cost,
             "source": self.source,
             "trans": list(self.trans),
+            "strip": self.strip,
         }
 
     @classmethod
@@ -119,6 +127,7 @@ class GemmPlan:
             est_cost=row["est_cost"],
             source=row.get("source", "analytical"),
             trans=tuple(bool(t) for t in trans) if trans else NO_TRANS,
+            strip=int(row.get("strip") or 1),
         )
 
 
@@ -133,6 +142,7 @@ class LayerPlan:
     # training sub-plans: the layer's two cotangent GEMMs (None = fwd-only)
     bwd_dx: GemmPlan | None = None  # dX = dY @ W^T, an (M,N)x(N,K) GEMM
     bwd_dw: GemmPlan | None = None  # dW = X^T @ dY, a (K,M)x(M,N) GEMM
+    strip: int = 1  # forward accumulator-strip depth (1 = streamed)
 
 
 @dataclass
@@ -179,6 +189,7 @@ class DataflowPlan:
                     "est_cost": l.est_cost,
                     "block": list(l.block) if l.block else None,
                     "source": l.source,
+                    "strip": l.strip,
                     "bwd_dx": l.bwd_dx.to_row() if l.bwd_dx else None,
                     "bwd_dw": l.bwd_dw.to_row() if l.bwd_dw else None,
                 }
@@ -201,6 +212,7 @@ class DataflowPlan:
                     est_cost=row["est_cost"],
                     block=tuple(blk) if blk else None,
                     source=row.get("source", "analytical"),
+                    strip=int(row.get("strip") or 1),
                     bwd_dx=GemmPlan.from_row(row.get("bwd_dx")),
                     bwd_dw=GemmPlan.from_row(row.get("bwd_dw")),
                 )
@@ -226,7 +238,7 @@ def plan_kernels(
     bm: int = 512,
     bk: int = 512,
     bn: int = 512,
-    vmem_limit: int = 128 * 1024 * 1024,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
 ) -> DataflowPlan:
     """TPU-native CMU: pick per-GEMM dataflow by HBM-traffic roofline."""
     plan = DataflowPlan()
@@ -240,7 +252,7 @@ def plan_kernels(
 
 
 def plan_kernels_tuned(
-    gemms: list[GemmShape], vmem_limit: int = 96 * 1024 * 1024
+    gemms: list[GemmShape], vmem_limit: int = VMEM_BUDGET_BYTES
 ) -> list[tuple[GemmShape, Dataflow, tuple[int, int, int], float]]:
     """Full CMU: co-tuned (dataflow, block) per GEMM. Returns rich rows."""
     rows = []
@@ -271,9 +283,10 @@ def measure_kernel(
     epilogue: "bool | EpilogueSig" = False,
     trans: tuple[bool, bool] = NO_TRANS,
     via_copy: bool = False,
+    strip: int = 1,
 ) -> float:
     """Walltime (s) of one real kernel execution of ``gemm`` under
-    (dataflow, block) — interpret mode on CPU, on-device on TPU.
+    (dataflow, block, strip) — interpret mode on CPU, on-device on TPU.
 
     Returns the best of ``iters`` timed runs (min filters scheduler noise).
     ``epilogue`` selects what is timed for forward GEMMs: ``False`` the bare
@@ -288,6 +301,9 @@ def measure_kernel(
     before the plain kernel runs — the copy-based fallback, **its HBM
     transpose cost included**, which is what makes the CMU's re-ranking of
     the two variants honest.
+
+    ``strip`` times the WS/IS two-level schedule (VMEM-resident accumulator
+    strip); 1 is the streamed schedule.
     """
     import time
 
@@ -316,18 +332,18 @@ def measure_kernel(
         res = (jnp.zeros((gemm.M, gemm.N), dtype) if sig.residual else None)
         run = lambda: ops.flex_linear(
             x, w, b, activation=sig.activation, residual=res,
-            dataflow=dataflow, block=block, interpret=interpret,
+            dataflow=dataflow, block=block, interpret=interpret, strip=strip,
         )
     elif via_copy:
         # eager .T executes an HBM transpose copy on every timed call
         run = lambda: ops.flex_matmul(
             x.T if trans_a else x, w.T if trans_b else w,
-            dataflow=dataflow, block=block, interpret=interpret,
+            dataflow=dataflow, block=block, interpret=interpret, strip=strip,
         )
     else:
         run = lambda: ops.flex_matmul(
             x, w, dataflow=dataflow, block=block, interpret=interpret,
-            trans_a=trans_a, trans_b=trans_b,
+            trans_a=trans_a, trans_b=trans_b, strip=strip,
         )
     for _ in range(warmup):
         run().block_until_ready()
@@ -356,18 +372,40 @@ def bwd_gemms(gemm: GemmShape) -> tuple[GemmShape, GemmShape]:
 
 def _ranked_candidates(
     gemm: GemmShape, vmem_limit: int
-) -> list[tuple[float, Dataflow, tuple[int, int, int]]]:
-    """All VMEM-feasible (dataflow, block) configs, best analytical first."""
+) -> list[tuple[float, Dataflow, tuple[int, int, int], int]]:
+    """All VMEM-feasible (dataflow, block, strip) configs, best analytical
+    first.
+
+    The strip axis makes the schedule space three-dimensional: for WS/IS
+    every accumulator-strip depth that tiles the streamed output axis is a
+    distinct schedule (strip=1 streams partials through HBM; deeper strips
+    trade stationary-operand re-fetches for zero partial traffic), and the
+    strip's f32 scratch counts against the same ``VMEM_BUDGET_BYTES`` as
+    the operand blocks — a candidate whose strip doesn't fit is discarded,
+    never silently shrunk.  OS contributes strip=1 only (its accumulator is
+    already resident; the wider-accumulator OS *is* the IS strip schedule).
+    The M-axis candidates include the sublane-aligned skinny blocks so
+    decode-geometry GEMMs (M <= 32) are not forced to pad to 128 rows.
+    """
     ranked = []
     for df in ALL_DATAFLOWS:
-        for bm in kernel_block_candidates(gemm.M):
+        for bm in kernel_block_candidates(gemm.M, sublane=True):
             for bk in kernel_block_candidates(gemm.K):
                 for bn in kernel_block_candidates(gemm.N):
-                    cost = hbm_traffic_bytes(gemm, df, bm, bk, bn)
-                    if cost.vmem_bytes <= vmem_limit:
-                        ranked.append((cost.time_s(), df, (bm, bk, bn)))
-    ranked.sort(key=lambda t: t[0])
-    return ranked
+                    for strip in strip_candidates(
+                        strip_blocks(gemm, df, bm, bn)
+                    ):
+                        cost = hbm_traffic_bytes(gemm, df, bm, bk, bn,
+                                                 strip=strip)
+                        if cost.vmem_bytes <= vmem_limit:
+                            ranked.append(
+                                (cost.time_s(), cost.hbm_bytes, df,
+                                 (bm, bk, bn), strip)
+                            )
+    # roofline ties (compute-bound shapes) break toward less HBM traffic —
+    # same walltime, less bandwidth and energy
+    ranked.sort(key=lambda t: (t[0], t[1]))
+    return [(t, df, blk, strip) for t, _, df, blk, strip in ranked]
 
 
 def _tune_gemm(
@@ -381,48 +419,51 @@ def _tune_gemm(
     epilogue: "bool | EpilogueSig",
     trans: tuple[bool, bool] = NO_TRANS,
 ) -> GemmPlan:
-    """Tune one GEMM: analytical pruning, then real-execution timing of the
-    ``top_k`` survivors (falls back to the analytical winner when the GEMM
-    is too large for interpret-mode timing or measurement is off).
+    """Tune one GEMM: analytical pruning over the (dataflow, block, strip)
+    space, then real-execution timing of the ``top_k`` survivors (falls
+    back to the analytical winner when the GEMM is too large for
+    interpret-mode timing or measurement is off).
 
     ``trans`` marks a backward GEMM whose operands live in transposed
-    layout.  Each surviving (dataflow, block) is then timed **twice**: the
-    zero-copy transposed-operand variant, and the copy-based fallback with
-    its HBM transpose executed inside the timed region — so the ranking sees
-    the transpose traffic the old tuner (which timed pre-transposed
-    operands) never saw.  Analytically the zero-copy variant strictly
-    dominates (same kernel traffic, minus the copy), so it is the pick
-    whenever measurement is off.
+    layout.  Each surviving (dataflow, block, strip) is then timed
+    **twice**: the zero-copy transposed-operand variant, and the copy-based
+    fallback with its HBM transpose executed inside the timed region — so
+    the ranking sees the transpose traffic the old tuner (which timed
+    pre-transposed operands) never saw.  Analytically the zero-copy variant
+    strictly dominates (same kernel traffic, minus the copy), so it is the
+    pick whenever measurement is off.
     """
     ranked = _ranked_candidates(gemm, vmem_limit)
     if not ranked:
-        raise ValueError(f"no (dataflow, block) fits VMEM for {gemm}")
+        raise ValueError(f"no (dataflow, block, strip) fits VMEM for {gemm}")
     measurable = measure and not (interpret and gemm.macs > MAX_INTERPRET_MACS)
     if measurable:
         timed = []
-        for _, df, blk in ranked[:top_k]:
+        for _, df, blk, strip in ranked[:top_k]:
             timed.append(
                 (measure_kernel(gemm, df, blk, iters=iters, interpret=interpret,
-                                epilogue=epilogue, trans=trans), trans, df, blk)
+                                epilogue=epilogue, trans=trans, strip=strip),
+                 trans, df, blk, strip)
             )
             if trans != NO_TRANS:
                 timed.append(
                     (measure_kernel(gemm, df, blk, iters=iters,
                                     interpret=interpret, trans=trans,
-                                    via_copy=True), NO_TRANS, df, blk)
+                                    via_copy=True, strip=strip),
+                     NO_TRANS, df, blk, strip)
                 )
-        cost, tr, df, blk = min(timed, key=lambda t: t[0])
+        cost, tr, df, blk, strip = min(timed, key=lambda t: t[0])
         return GemmPlan(dataflow=df, block=blk, est_cost=cost,
-                        source="measured", trans=tr)
-    cost, df, blk = ranked[0]
+                        source="measured", trans=tr, strip=strip)
+    cost, df, blk, strip = ranked[0]
     return GemmPlan(dataflow=df, block=blk, est_cost=cost,
-                    source="analytical", trans=trans)
+                    source="analytical", trans=trans, strip=strip)
 
 
 def autotune_plan(
     gemms: list[GemmShape],
     *,
-    vmem_limit: int = 96 * 1024 * 1024,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
     top_k: int = 3,
     measure: bool = True,
     iters: int = 2,
@@ -432,9 +473,12 @@ def autotune_plan(
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
-    Per GEMM: rank every VMEM-feasible (dataflow, block) config with the
-    roofline model, keep the ``top_k`` best, time each survivor with real
-    kernel executions, and program the walltime argmin into the plan.  When
+    Per GEMM: rank every VMEM-feasible (dataflow, block, strip) config with
+    the strip-aware roofline model — WS/IS accumulator-strip depths are
+    schedules in their own right, trading stationary-operand re-fetches for
+    zero partial-sum HBM traffic under one shared ``VMEM_BUDGET_BYTES`` —
+    keep the ``top_k`` best, time each survivor with real kernel
+    executions, and program the walltime argmin into the plan.  When
     measurement is disabled (or the GEMM is too large for interpret-mode
     timing on CPU) the analytical winner is kept, marked
     ``source="analytical"`` so callers can tell which decisions were measured.
@@ -470,7 +514,7 @@ def autotune_plan(
         plan.layers.append(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
-                      bwd_dx=dx, bwd_dw=dw)
+                      bwd_dx=dx, bwd_dw=dw, strip=fwd.strip)
         )
     return plan
 
@@ -478,7 +522,7 @@ def autotune_plan(
 def add_bwd_subplans(
     plan: DataflowPlan,
     *,
-    vmem_limit: int = 96 * 1024 * 1024,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
     top_k: int = 3,
     measure: bool = True,
     iters: int = 2,

@@ -154,6 +154,12 @@ def best_dataflow(shape: GemmShape, rows: int, cols: int) -> tuple[Dataflow, int
 # TPU-native (kernel-level) cost model: HBM <-> VMEM block traffic.
 # ---------------------------------------------------------------------------
 
+# The single VMEM budget every planner and feasibility check shares: the
+# analytical pruning, the measured autotune, and the strip-feasibility check
+# all answer to this one constant (a conservative per-core figure — block
+# working sets plus the f32 accumulator strip must fit under it).
+VMEM_BUDGET_BYTES = 96 * 1024 * 1024
+
 
 @dataclass(frozen=True)
 class KernelCost:
@@ -176,6 +182,7 @@ def hbm_traffic_bytes(
     bn: int,
     in_bytes: int = 2,
     out_bytes: int = 4,
+    strip: int = 1,
 ) -> KernelCost:
     """HBM traffic for a blocked matmul with block sizes (bm, bk, bn).
 
@@ -193,24 +200,82 @@ def hbm_traffic_bytes(
     where Mb=ceil(M/bm) etc.  WS/IS pay partial-sum read+write traffic when
     K doesn't fit one block (Kb > 1); OS never writes partials — this is the
     VMEM-level image of the paper's "outputs accumulate in place" argument.
+
+    **Two-level stationarity (``strip`` >= 2).**  WS/IS can instead pin a
+    *strip* of ``strip`` f32 output blocks in VMEM scratch and reorder the
+    grid so each strip's k-revisits are consecutive: partial sums never
+    touch HBM (one clean write per output block, like OS) and the stationary
+    operand stays pinned across the strip's inner sweep exactly as before.
+    The price is a re-fetch of the *stationary* operand once per strip —
+    the schedule trades ``(2*Kb - 1)`` output round-trips for
+    ``ceil(streamed_blocks / strip)`` fetches of the pinned operand:
+
+      WS strip: bytes = ceil(Mb/strip) * (K*N) * in + Nb * (M*K) * in + c
+      IS strip: bytes = ceil(Nb/strip) * (M*K) * in + Mb * (K*N) * in + c
+
+    and the VMEM working set grows by the strip's resident output buffers:
+    the f32 accumulator strip plus the same-extent copy-out block the
+    fused kernels allocate, ``strip * bm * bn * (4 + out_bytes)`` (an
+    over-count for the plain-f32 case, where the two share one buffer —
+    conservative on purpose: a strip the budget admits must actually fit).
+    ``strip=1`` is exactly the streamed schedule above; OS ignores
+    ``strip`` (its accumulator is already VMEM-resident, and the strip
+    generalisation of OS *is* the IS strip schedule).
     """
     M, K, N = shape.M, shape.K, shape.N
     Mb, Kb, Nb = _ceil_div(M, bm), _ceil_div(K, bk), _ceil_div(N, bn)
     a, b, c = M * K * in_bytes, K * N * in_bytes, M * N * out_bytes
+    blocks_vmem = (bm * bk + bk * bn) * in_bytes
     if dataflow is Dataflow.OS:
         hbm = Nb * a + Mb * b + c
-        vmem = (bm * bk + bk * bn) * in_bytes + bm * bn * 4  # f32 accumulator
+        vmem = blocks_vmem + bm * bn * 4  # f32 accumulator
     elif dataflow is Dataflow.WS:
-        partial_rw = (2 * Kb - 1) * c if Kb > 1 else c
-        hbm = b + Nb * a + partial_rw
-        vmem = bk * bn * in_bytes + bm * bk * in_bytes + bm * bn * 4
+        if strip > 1:
+            hbm = _ceil_div(Mb, strip) * b + Nb * a + c
+            # f32 accumulator strip + the fused kernels' copy-out strip
+            vmem = blocks_vmem + strip * bm * bn * (4 + out_bytes)
+        else:
+            partial_rw = (2 * Kb - 1) * c if Kb > 1 else c
+            hbm = b + Nb * a + partial_rw
+            vmem = blocks_vmem + bm * bn * 4
     elif dataflow is Dataflow.IS:
-        partial_rw = (2 * Kb - 1) * c if Kb > 1 else c
-        hbm = a + Mb * b + partial_rw
-        vmem = bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * 4
+        if strip > 1:
+            hbm = _ceil_div(Nb, strip) * a + Mb * b + c
+            vmem = blocks_vmem + strip * bm * bn * (4 + out_bytes)
+        else:
+            partial_rw = (2 * Kb - 1) * c if Kb > 1 else c
+            hbm = a + Mb * b + partial_rw
+            vmem = blocks_vmem + bm * bn * 4
     else:  # pragma: no cover
         raise ValueError(dataflow)
     return KernelCost(hbm_bytes=hbm, mxu_flops=shape.flops, vmem_bytes=vmem)
+
+
+def strip_blocks(shape: GemmShape, dataflow: Dataflow, bm: int, bn: int) -> int:
+    """Block count of the axis a WS/IS accumulator strip tiles (the streamed
+    output axis): M-blocks for WS, N-blocks for IS.  1 for OS — its strip
+    generalisation is the IS strip schedule, so OS only ever runs strip=1."""
+    if dataflow is Dataflow.WS:
+        return _ceil_div(shape.M, bm)
+    if dataflow is Dataflow.IS:
+        return _ceil_div(shape.N, bn)
+    return 1
+
+
+def strip_candidates(n_blocks: int) -> list[int]:
+    """Strip depths worth trying over an axis of ``n_blocks`` output blocks:
+    every divisor (ragged strips would need masked flushes, so the kernels
+    require the strip to tile the axis exactly).  1 = the streamed schedule."""
+    if n_blocks <= 1:
+        return [1]
+    divs = set()
+    d = 1
+    while d * d <= n_blocks:
+        if n_blocks % d == 0:
+            divs.add(d)
+            divs.add(n_blocks // d)
+        d += 1
+    return sorted(divs)
 
 
 def best_kernel_dataflow(
@@ -218,7 +283,7 @@ def best_kernel_dataflow(
     bm: int = 512,
     bk: int = 512,
     bn: int = 512,
-    vmem_limit: int = 128 * 1024 * 1024,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
 ) -> tuple[Dataflow, KernelCost]:
     """Pick the dataflow minimising roofline time subject to VMEM fit."""
     candidates: list[tuple[float, Dataflow, KernelCost]] = []
@@ -234,13 +299,29 @@ def best_kernel_dataflow(
 
 DEFAULT_BLOCK_CANDIDATES = (128, 256, 512, 1024, 2048, 4096, 8192)
 
+# Sublane-aligned skinny blocks for the M dimension of decode-step GEMMs
+# (M = batch, often <= 32): without them the tuner's smallest bm is 128 and
+# a 16-row projection models >87% wasted MXU occupancy.  f32 tiles need 8
+# sublanes (bf16 wants 16 — the tuner may still pick 8; Mosaic relayouts).
+SKINNY_BLOCK_CANDIDATES = (8, 16, 32, 64)
+
 
 def kernel_block_candidates(
-    d: int, candidates: tuple[int, ...] = DEFAULT_BLOCK_CANDIDATES
+    d: int,
+    candidates: tuple[int, ...] = DEFAULT_BLOCK_CANDIDATES,
+    sublane: bool = False,
 ) -> list[int]:
-    """MXU-aligned block sizes worth trying for one GEMM dimension of ``d``."""
+    """MXU-aligned block sizes worth trying for one GEMM dimension of ``d``.
+
+    With ``sublane`` (the M dimension), a dim smaller than one MXU tile also
+    offers the sublane-aligned skinny sizes covering it, so skinny GEMMs
+    (decode-step projections) are not forced to pad to 128+ rows.
+    """
     rounded = max(_ceil_div(d, 128) * 128, 128)
     cs = [c for c in candidates if c <= rounded]
+    if sublane and d < 128:
+        skinny = [s for s in SKINNY_BLOCK_CANDIDATES if s >= d]
+        cs = [s for s in SKINNY_BLOCK_CANDIDATES if s < d] + skinny[:1] + cs
     if rounded <= 16384 and rounded not in cs:
         cs.append(rounded)  # exact-fit block (e.g. bk = K kills partials)
     return cs or [128]
@@ -248,10 +329,12 @@ def kernel_block_candidates(
 
 def tune_kernel_dataflow(
     shape: GemmShape,
-    vmem_limit: int = 96 * 1024 * 1024,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
     candidates: tuple[int, ...] = DEFAULT_BLOCK_CANDIDATES,
 ) -> tuple[Dataflow, tuple[int, int, int], KernelCost]:
-    """Co-tune (dataflow, block shape) under a VMEM budget.
+    """Co-tune (dataflow, block shape) under a VMEM budget — streamed
+    (strip=1) schedules only; the production tuner that also searches the
+    accumulator-strip axis is ``cmu._ranked_candidates``/``autotune_plan``.
 
     This is the full CMU: the paper tunes which operand is pinned; on TPU the
     block shape decides *how much* of it is pinned, so the two must be chosen

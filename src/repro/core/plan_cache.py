@@ -21,17 +21,30 @@ Schema versions (see docs/autotune.md for the full JSON shape):
     ``[trans_a, trans_b]`` operand layout its kernel runs with (the
     zero-copy transposed-operand variant, or ``[false, false]`` when the
     copy-based fallback measured faster).
+  * v4 — every decision (forward row and backward sub-plan) additionally
+    carries ``strip``, the WS/IS accumulator-strip depth: 1 is the
+    streamed schedule (partial sums through HBM — all pre-v4 plans ran
+    this), >= 2 the two-level schedule with a VMEM-resident strip.
 
 Older files still **load and migrate**: v1 rows are a strict subset (the
 backward sub-plans come back as None); v2 backward sub-plans — tuned on
 pre-transposed operands, so their (dataflow, block) remains valid for the
 same logical GEMM — are migrated to the zero-copy layout of their role
 (dX -> trans_b, dW -> trans_a), which never costs more than the copy path
-the v2 code actually ran.  Training, which needs the sub-plans, passes
-``require_bwd=True`` to ``load_or_autotune`` and a fwd-only cache is then
-re-tuned and overwritten, never silently half-applied.  Files from a
-*newer* schema than this build understands are rejected with a clear
-re-tune message.
+the v2 code actually ran.  v1–v3 decisions all migrate with ``strip=1``:
+that is exactly the schedule those plans were tuned on, so a migrated plan
+keeps its (dataflow, block, trans) decisions and reproduces the old
+results **bit-for-bit**; the strip axis only enters on re-tune.  One
+traffic caveat: streamed WS/IS layers *with a residual* now add it
+outside the kernel (one extra f32 output round-trip — same f32 op order,
+identical bits; see docs/architecture.md, fused-epilogue contract), so a
+migrated plan that hits that combination is worth re-tuning, which lets
+the CMU route such layers to OS or a strip.  Training, which needs the
+sub-plans,
+passes ``require_bwd=True`` to ``load_or_autotune`` and a fwd-only cache
+is then re-tuned and overwritten, never silently half-applied.  Files
+from a *newer* schema than this build understands are rejected with a
+clear re-tune message.
 """
 
 from __future__ import annotations
@@ -41,9 +54,9 @@ import os
 
 from .cmu import TRANS_DX, TRANS_DW, DataflowPlan, add_bwd_subplans, autotune_plan
 
-PLAN_CACHE_VERSION = 3
+PLAN_CACHE_VERSION = 4
 # older schemas this build can still read and migrate
-COMPATIBLE_VERSIONS = (1, 2, 3)
+COMPATIBLE_VERSIONS = (1, 2, 3, 4)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -83,29 +96,45 @@ def load_plan(path: str) -> DataflowPlan:
         logging.getLogger(__name__).info(
             "plan cache %s uses schema v%d; loaded as v%d (%s)",
             path, version, PLAN_CACHE_VERSION,
-            f"{migrated} backward sub-plans migrated to zero-copy layouts"
+            f"{migrated} decisions migrated (zero-copy layouts / strip=1 "
+            "streamed semantics)"
             if migrated else "backward sub-plans absent — training will re-tune",
         )
     return DataflowPlan.from_json(json.dumps(layers))
 
 
 def _migrate_rows(layers: list[dict], version: int) -> int:
-    """In-place v1/v2 -> v3 row migration; returns migrated sub-plan count.
+    """In-place v1/v2/v3 -> v4 row migration; returns migrated field count.
 
     v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
     the copy-based path minus the copy — their (dataflow, block) stays valid
     for the same logical GEMM, and the zero-copy transposed-operand layout
     runs that exact schedule without the HBM copy, so migration assigns each
     role its zero-copy ``trans`` rather than pinning the old copy behaviour.
+
+    v1–v3 decisions (forward rows and sub-plans) gain ``strip=1``: the
+    streamed schedule every pre-v4 plan was tuned on.  A migrated plan
+    therefore keeps its (dataflow, block, trans) decisions and produces
+    bit-for-bit identical outputs (streamed WS/IS residuals now fuse
+    outside the kernel — same op order, extra f32 round-trip; see the
+    module docstring), and only a re-tune explores the strip axis.
     """
     migrated = 0
-    if version >= 3:
+    if version >= 4:
         return migrated
     for row in layers:
+        if version < 4 and "strip" not in row:
+            row["strip"] = 1
+            migrated += 1
         for key, trans in (("bwd_dx", TRANS_DX), ("bwd_dw", TRANS_DW)):
             sub = row.get(key)
-            if sub is not None and "trans" not in sub:
+            if sub is None:
+                continue
+            if version < 3 and "trans" not in sub:
                 sub["trans"] = list(trans)
+                migrated += 1
+            if version < 4 and "strip" not in sub:
+                sub["strip"] = 1
                 migrated += 1
     return migrated
 

@@ -66,7 +66,9 @@ from . import flex_matmul as fk
 #   (Dataflow.WS, (256, 256, 256), (False, True))  — explicit operand layout:
 #     the third element is (trans_a, trans_b); omitted means the role's
 #     zero-copy transposed-operand variant (the v3 default).
-BwdSpec = tuple  # (Dataflow, block | None[, (trans_a, trans_b)])
+#   (Dataflow.WS, (256, 256, 256), (False, True), 4) — explicit accumulator
+#     strip depth; omitted (pre-v4 specs) means 1, today's streamed WS/IS.
+BwdSpec = tuple  # (Dataflow, block | None[, (trans_a, trans_b)[, strip]])
 
 
 def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -104,20 +106,42 @@ def _round_up_dim(d: int, mult: int = 128) -> int:
     return r
 
 
+def _fit_strip(dataflow: Dataflow, strip: int, M: int, N: int,
+               block: tuple[int, int, int]) -> int:
+    """Clamp a requested accumulator-strip depth to what the padded geometry
+    admits: the largest depth <= ``strip`` that tiles the strip axis's block
+    count exactly (M blocks for WS, N blocks for IS).  OS always runs 1.
+    CMU-planned strips already tile the axis they were tuned for, so this
+    only engages when a plan is applied to a different (padded) geometry.
+    """
+    if strip <= 1 or dataflow is Dataflow.OS:
+        return 1
+    bm, _, bn = block
+    # the padded extent is the next block multiple, so ceil is the block count
+    blocks = -(-M // bm) if dataflow is Dataflow.WS else -(-N // bn)
+    s = max(1, min(strip, blocks))
+    while blocks % s:
+        s -= 1
+    return s
+
+
 def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int,
                 default_trans: tuple[bool, bool] = (False, False)):
-    """Resolve one backward GEMM's (dataflow, block, trans): the CMU plan's
-    choice when given, else the trace-time roofline argmin (shapes are
-    static).  ``default_trans`` is the role's zero-copy operand layout — a
-    2-tuple spec (legacy, pre-v3) inherits it; a 3-tuple spec states its own
-    (the CMU may have measured the copy-based fallback as faster)."""
+    """Resolve one backward GEMM's (dataflow, block, trans, strip): the CMU
+    plan's choice when given, else the trace-time roofline argmin (shapes
+    are static).  ``default_trans`` is the role's zero-copy operand layout —
+    a 2-tuple spec (legacy, pre-v3) inherits it; a 3-tuple spec states its
+    own (the CMU may have measured the copy-based fallback as faster).  The
+    optional 4th element is the accumulator-strip depth; pre-v4 specs omit
+    it and run streamed (strip=1), as does the trace-time fallback."""
     if spec is not None:
         df, blk = spec[0], spec[1]
         trans = tuple(spec[2]) if len(spec) > 2 and spec[2] is not None \
             else default_trans
-        return df, tuple(blk) if blk else fk.DEFAULT_BLOCK, trans
+        strip = int(spec[3]) if len(spec) > 3 and spec[3] else 1
+        return df, tuple(blk) if blk else fk.DEFAULT_BLOCK, trans, strip
     df, _ = best_kernel_dataflow(GemmShape(M=M, K=K, N=N))
-    return df, fk.DEFAULT_BLOCK, default_trans
+    return df, fk.DEFAULT_BLOCK, default_trans, 1
 
 
 # ---------------------------------------------------------------------------
@@ -126,19 +150,22 @@ def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int,
 
 
 def _matmul_run(a, b, dataflow, block, interpret, out_dtype,
-                trans_a: bool = False, trans_b: bool = False):
+                trans_a: bool = False, trans_b: bool = False, strip: int = 1):
     """Primal blocked matmul: pad -> flex kernel -> unpad -> cast.
 
     With ``trans_a`` / ``trans_b`` the operands are in transposed physical
     layout ((K, M) / (N, K)); padding follows the physical axes and the
     kernel reads them through the transposed index maps — no copy.
+    ``strip`` selects the WS/IS two-level schedule, clamped to what the
+    padded geometry admits (``_fit_strip``).
     """
     M, K, N = fk._logical_dims(a, b, trans_a, trans_b)
     bm, bk, bn = _fit_block(M, K, N, block)
+    strip = _fit_strip(dataflow, strip, M, N, (bm, bk, bn))
     ap = _pad_to(a, bk, bm) if trans_a else _pad_to(a, bm, bk)
     bp = _pad_to(b, bn, bk) if trans_b else _pad_to(b, bk, bn)
     out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret,
-                    trans_a=trans_a, trans_b=trans_b)
+                    trans_a=trans_a, trans_b=trans_b, strip=strip)
     out = out[:M, :N]
     return out.astype(out_dtype or jnp.promote_types(a.dtype, b.dtype))
 
@@ -153,7 +180,7 @@ def _matmul_fwd(cfg, a, b):
 
 
 def _matmul_bwd(cfg, residuals, g):
-    dataflow, block, interpret, out_dtype, trans_a, trans_b = cfg
+    dataflow, block, interpret, out_dtype, trans_a, trans_b, strip = cfg
     a, b = residuals
     M, K, N = fk._logical_dims(a, b, trans_a, trans_b)
     # With A' = op(A), B' = op(B):  dA' = g @ B'^T  and  dB' = A'^T @ g.
@@ -162,24 +189,24 @@ def _matmul_bwd(cfg, residuals, g):
     # maps, so no combination of flags ever materialises a transpose.
     if trans_a:
         # dA (stored (K, M)) = B' @ g^T — a (K,N)x(N,M) GEMM.
-        df, blk, _ = _bwd_choice(None, K, N, M)
+        df, blk, _, st = _bwd_choice(None, K, N, M)
         da = _matmul_run(b, g, df, blk, interpret, a.dtype,
-                         trans_a=trans_b, trans_b=True)
+                         trans_a=trans_b, trans_b=True, strip=st)
     else:
         # dA = g @ B'^T — an (M,N)x(N,K) GEMM; B'^T reads stored B directly.
-        df, blk, _ = _bwd_choice(None, M, N, K)
+        df, blk, _, st = _bwd_choice(None, M, N, K)
         da = _matmul_run(g, b, df, blk, interpret, a.dtype,
-                         trans_b=not trans_b)
+                         trans_b=not trans_b, strip=st)
     if trans_b:
         # dB (stored (N, K)) = g^T @ A' — an (N,M)x(M,K) GEMM.
-        df, blk, _ = _bwd_choice(None, N, M, K)
+        df, blk, _, st = _bwd_choice(None, N, M, K)
         db = _matmul_run(g, a, df, blk, interpret, b.dtype,
-                         trans_a=True, trans_b=trans_a)
+                         trans_a=True, trans_b=trans_a, strip=st)
     else:
         # dB = A'^T @ g — a (K,M)x(M,N) GEMM; A'^T reads stored A directly.
-        df, blk, _ = _bwd_choice(None, K, M, N)
+        df, blk, _, st = _bwd_choice(None, K, M, N)
         db = _matmul_run(a, g, df, blk, interpret, b.dtype,
-                         trans_a=not trans_a)
+                         trans_a=not trans_a, strip=st)
     return da, db
 
 
@@ -188,7 +215,7 @@ _matmul_core.defvjp(_matmul_fwd, _matmul_bwd)
 
 @functools.partial(
     jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype",
-                              "trans_a", "trans_b")
+                              "trans_a", "trans_b", "strip")
 )
 def flex_matmul(
     a: jax.Array,
@@ -199,10 +226,14 @@ def flex_matmul(
     out_dtype: jnp.dtype | None = None,
     trans_a: bool = False,
     trans_b: bool = False,
+    strip: int = 1,
 ) -> jax.Array:
     """C = op(A) @ op(B) under the given dataflow; pads/unpads to block
     multiples.  ``trans_a`` / ``trans_b`` read the operands in transposed
     physical layout through the kernels' index maps — zero HBM copies.
+    ``strip >= 2`` runs the WS/IS two-level schedule (VMEM-resident
+    accumulator strip, no partial-sum HBM traffic), clamped to the padded
+    geometry; OS and ``strip = 1`` run today's streamed schedules.
 
     Differentiable: ``jax.grad`` routes both cotangent GEMMs back through
     the flex kernels, themselves transpose-free for every flag combination
@@ -210,7 +241,7 @@ def flex_matmul(
     """
     fk._logical_dims(a, b, trans_a, trans_b)  # validates the inner dims
     return _matmul_core(
-        (dataflow, block, interpret, out_dtype, trans_a, trans_b), a, b
+        (dataflow, block, interpret, out_dtype, trans_a, trans_b, strip), a, b
     )
 
 
@@ -229,6 +260,7 @@ class _LinearCfg(NamedTuple):
     out_dtype: jnp.dtype | None
     bwd_dx: BwdSpec | None
     bwd_dw: BwdSpec | None
+    strip: int = 1
 
 
 def _linear_run(cfg: _LinearCfg, x, w, b, residual, save_preact: bool):
@@ -236,6 +268,7 @@ def _linear_run(cfg: _LinearCfg, x, w, b, residual, save_preact: bool):
     M, K = x.shape
     _, N = w.shape
     bm, bk, bn = _fit_block(M, K, N, cfg.block)
+    strip = _fit_strip(cfg.dataflow, cfg.strip, M, N, (bm, bk, bn))
     xp = _pad_to(x, bm, bk)
     wp = _pad_to(w, bk, bn)
     bp = None if b is None else _pad_to(b.reshape(1, N), 1, bn)
@@ -245,6 +278,7 @@ def _linear_run(cfg: _LinearCfg, x, w, b, residual, save_preact: bool):
         xp, wp, cfg.dataflow,
         bias=bp, residual=rp, activation=cfg.activation, out_dtype=odt,
         block=(bm, bk, bn), interpret=cfg.interpret, save_preact=save_preact,
+        strip=strip,
     )
     if save_preact:
         out, z = out
@@ -283,17 +317,17 @@ def _linear_bwd(cfg: _LinearCfg, residuals, g):
     else:
         dz = g32
     # The two backward GEMMs, each under its own CMU-planned (dataflow,
-    # block, operand layout).  Default layouts are the zero-copy variants:
-    # dX streams W as stored via trans_b, dW streams X as stored via
-    # trans_a.  A plan that measured the copy-based fallback as faster
+    # block, operand layout, strip).  Default layouts are the zero-copy
+    # variants: dX streams W as stored via trans_b, dW streams X as stored
+    # via trans_a.  A plan that measured the copy-based fallback as faster
     # programs (False, False) and the transpose is materialised explicitly.
-    df_dx, blk_dx, tr_dx = _bwd_choice(cfg.bwd_dx, M, N, K, (False, True))
-    df_dw, blk_dw, tr_dw = _bwd_choice(cfg.bwd_dw, K, M, N, (True, False))
+    df_dx, blk_dx, tr_dx, st_dx = _bwd_choice(cfg.bwd_dx, M, N, K, (False, True))
+    df_dw, blk_dw, tr_dw, st_dw = _bwd_choice(cfg.bwd_dw, K, M, N, (True, False))
     gd = dz.astype(jnp.promote_types(x.dtype, w.dtype))
     dx = _matmul_run(gd, w if tr_dx[1] else w.T, df_dx, blk_dx,
-                     cfg.interpret, x.dtype, trans_b=tr_dx[1])
+                     cfg.interpret, x.dtype, trans_b=tr_dx[1], strip=st_dx)
     dw = _matmul_run(x if tr_dw[0] else x.T, gd, df_dw, blk_dw,
-                     cfg.interpret, w.dtype, trans_a=tr_dw[0])
+                     cfg.interpret, w.dtype, trans_a=tr_dw[0], strip=st_dw)
     if b_proto is None:
         db = None
     else:
@@ -308,7 +342,7 @@ _linear_core.defvjp(_linear_fwd, _linear_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=("activation", "dataflow", "block", "interpret",
-                     "out_dtype", "bwd_dx", "bwd_dw"),
+                     "out_dtype", "bwd_dx", "bwd_dw", "strip"),
 )
 def flex_linear(
     x: jax.Array,
@@ -323,6 +357,7 @@ def flex_linear(
     out_dtype: jnp.dtype | None = None,
     bwd_dx: BwdSpec | None = None,
     bwd_dw: BwdSpec | None = None,
+    strip: int = 1,
 ) -> jax.Array:
     """Fused linear layer: ``act(x @ w + b) + residual`` in one kernel pass.
 
@@ -336,14 +371,16 @@ def flex_linear(
     Differentiable end-to-end: under ``jax.grad`` the backward GEMMs
     ``dX = dY @ W^T`` and ``dW = X^T @ dY`` run as flex kernels under
     ``bwd_dx`` / ``bwd_dw`` — ``(Dataflow, (bm, bk, bn), (trans_a,
-    trans_b))`` tuples, normally supplied by the CMU train plan — or the
-    trace-time roofline argmin when None.  The third element is the operand
-    layout: omitted (legacy 2-tuples) or the role's default means the
-    zero-copy transposed-operand kernel that streams W/X as stored;
+    trans_b), strip)`` tuples, normally supplied by the CMU train plan — or
+    the trace-time roofline argmin when None.  The third element is the
+    operand layout: omitted (legacy 2-tuples) or the role's default means
+    the zero-copy transposed-operand kernel that streams W/X as stored;
     ``(False, False)`` forces the copy-based fallback that materialises the
-    transpose in HBM first.  The activation gradient uses the
-    pre-activation the forward kernel saved (see module docstring for the
-    save-vs-recompute policy).
+    transpose in HBM first.  The fourth element is the accumulator-strip
+    depth (omitted = 1, streamed).  ``strip`` plays the same role for the
+    forward GEMM.  The activation gradient uses the pre-activation the
+    forward kernel saved (see module docstring for the save-vs-recompute
+    policy).
 
     Examples (interpret mode, so they run anywhere):
 
@@ -361,7 +398,7 @@ def flex_linear(
     if K != K2:
         raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
     cfg = _LinearCfg(activation, dataflow, block, interpret, out_dtype,
-                     bwd_dx, bwd_dw)
+                     bwd_dx, bwd_dw, strip)
     return _linear_core(cfg, x, w, b, residual)
 
 

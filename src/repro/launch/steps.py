@@ -143,10 +143,16 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
                                     epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
+    stripped = sum(
+        (lp.strip > 1)
+        + sum(s.strip > 1 for s in (lp.bwd_dx, lp.bwd_dw) if s is not None)
+        for lp in plan.layers
+    )
     logging.getLogger(__name__).info(
-        "plan cache %s: %s (%d layers%s, histogram %s)",
+        "plan cache %s: %s (%d layers%s, histogram %s, %d strip schedules)",
         src, path, len(plan.layers),
         " incl. bwd sub-plans" if plan.has_bwd() else "", plan.histogram(),
+        stripped,
     )
     return plan
 

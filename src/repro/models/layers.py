@@ -59,12 +59,15 @@ def linear(
         plan = active_plan()
         lp = plan.get(name) if (plan is not None and name) else None
         bwd_dx = bwd_dw = None
+        strip = 1
         if lp is not None:
-            df, blk = lp.dataflow, lp.block or DEFAULT_BLOCK
+            df, blk, strip = lp.dataflow, lp.block or DEFAULT_BLOCK, lp.strip
             if lp.bwd_dx is not None:
-                bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block, lp.bwd_dx.trans)
+                bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block, lp.bwd_dx.trans,
+                          lp.bwd_dx.strip)
             if lp.bwd_dw is not None:
-                bwd_dw = (lp.bwd_dw.dataflow, lp.bwd_dw.block, lp.bwd_dw.trans)
+                bwd_dw = (lp.bwd_dw.dataflow, lp.bwd_dw.block, lp.bwd_dw.trans,
+                          lp.bwd_dw.strip)
         else:
             df, _ = best_kernel_dataflow(GemmShape(x2.shape[0], K, N, name=name))
             blk = DEFAULT_BLOCK
@@ -72,7 +75,7 @@ def linear(
             x2, w, None if b is None else b.astype(x.dtype),
             activation=activation, residual=r2, dataflow=df, block=blk,
             interpret=default_interpret(), out_dtype=x.dtype,
-            bwd_dx=bwd_dx, bwd_dw=bwd_dw,
+            bwd_dx=bwd_dx, bwd_dw=bwd_dw, strip=strip,
         )
         return out.reshape(*lead, N)
     y = jnp.einsum("...d,df->...f", x, w)

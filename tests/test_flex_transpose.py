@@ -411,7 +411,7 @@ def test_v1_cache_still_loads_fwd_only():
         assert plan.layers[0].bwd_dx is None and not plan.has_bwd()
 
 
-def test_v3_roundtrip_preserves_trans_and_writes_v3():
+def test_roundtrip_preserves_trans_and_writes_current_schema():
     plan = autotune_plan([GemmShape(64, 96, 64, name="l0")], measure=False,
                          train=True)
     with tempfile.TemporaryDirectory() as d:
@@ -419,8 +419,10 @@ def test_v3_roundtrip_preserves_trans_and_writes_v3():
         save_plan(p, plan)
         with open(p) as f:
             payload = json.load(f)
-        assert payload["version"] == 3
+        assert payload["version"] == plan_cache_mod.PLAN_CACHE_VERSION
         assert payload["layers"][0]["bwd_dx"]["trans"] == [False, True]
+        assert "strip" in payload["layers"][0]
+        assert "strip" in payload["layers"][0]["bwd_dx"]
         plan2 = load_plan(p)
         assert plan2.layers == plan.layers
 
@@ -452,7 +454,15 @@ def test_migrated_v2_plan_drives_transpose_free_backward():
 
 
 def test_migration_is_idempotent_and_counts():
+    # a v2 row migrating to v4 gains: 2 sub-plan trans layouts + 3 strip=1
+    # defaults (fwd row + both sub-plans) = 5 migrated fields
     rows = _v2_payload()["layers"]
-    assert plan_cache_mod._migrate_rows(rows, 2) == 2
+    assert plan_cache_mod._migrate_rows(rows, 2) == 5
     assert plan_cache_mod._migrate_rows(rows, 2) == 0  # already migrated
-    assert plan_cache_mod._migrate_rows(rows, 3) == 0  # v3 untouched
+    # a v3 row only gains the strip=1 fields
+    v3_rows = _v2_payload()["layers"]
+    for row in v3_rows:
+        row["bwd_dx"]["trans"] = [False, True]
+        row["bwd_dw"]["trans"] = [True, False]
+    assert plan_cache_mod._migrate_rows(v3_rows, 3) == 3
+    assert plan_cache_mod._migrate_rows(v3_rows, 4) == 0  # v4 untouched

@@ -20,15 +20,21 @@ def test_train_step_benchmark_dry_run(monkeypatch, capsys, tmp_path):
     runpy.run_path(BENCH, run_name="__main__")
     out = capsys.readouterr().out
     assert "gradients match the XLA reference" in out
+    assert "strip schedules bit-identical to streamed" in out
+    assert "traffic model OK" in out
     assert "dry-run OK" in out
     with open(out_json) as f:
         record = json.load(f)
-    assert set(record["walltime_s"]) == {"pallas", "pallas_copy_bwd", "xla"}
+    assert set(record["walltime_s"]) == {"pallas", "pallas_streamed",
+                                         "pallas_copy_bwd", "xla"}
     # the copy path must be charged its transpose round-trip in the estimate
     est = record["hbm_bytes_est"]
     assert est["bwd_via_copy"] > est["bwd_transpose_free"] > 0
+    # the streamed schedules must be charged their partial-sum round-trips
+    assert est["forced_streamed"] >= est["plan_strips"] > 0
     for layer in record["layers"]:
         assert "trans" in layer["dx"] and "trans" in layer["dw"]
+        assert "strip" in layer["fwd"] and "strip" in layer["dx"]
 
 
 def test_checked_in_bench_baseline_is_consistent():
