@@ -43,9 +43,11 @@ from repro.core import (
     ALL_DATAFLOWS,
     Dataflow,
     GemmShape,
+    MeshSpec,
     autotune_plan,
     bwd_gemms,
     hbm_traffic_bytes,
+    mesh_local_gemm,
     strip_blocks,
     strip_candidates,
 )
@@ -203,6 +205,46 @@ def strip_showcase(shapes: list[GemmShape] = STRIP_SHOWCASE) -> list[dict]:
     return rows
 
 
+def mesh_rows(plan) -> list[dict]:
+    """Mesh-composition columns: per layer, the mesh-level dataflow the plan
+    programs, the ICI bytes/chip its collectives put on the wire (mesh cost
+    model), and the per-chip HBM bytes of the *local shard* GEMMs under the
+    tuned local geometry (fwd + dX + dW; an OS ring runs ``tp`` local
+    launches per GEMM, so its per-chip traffic is the per-step cost x tp)."""
+    rows = []
+    for lp in plan.layers:
+        mp = lp.mesh
+        if mp is None:
+            rows.append({"name": lp.name, "mesh": None})
+            continue
+        steps = mp.tp if mp.dataflow is Dataflow.OS else 1
+        lshape = mesh_local_gemm(lp.gemm, mp.dataflow, mp.tp, mp.dp)
+        hbm = 0
+        subs = [(lshape, mp.local)]
+        if mp.local_dx is not None and mp.local_dw is not None:
+            g_dx, g_dw = bwd_gemms(lshape)
+            subs += [(g_dx, mp.local_dx), (g_dw, mp.local_dw)]
+        for g, sub in subs:
+            blk = sub.block or DEFAULT_BLOCK
+            hbm += steps * hbm_traffic_bytes(
+                g, sub.dataflow, *blk, in_bytes=4, strip=sub.strip
+            ).hbm_bytes
+        rows.append({
+            "name": lp.name,
+            "mesh": {
+                "dataflow": mp.dataflow.name,
+                "tp": mp.tp, "dp": mp.dp,
+                "ici_comm_bytes": mp.comm_bytes,
+                "local": {"dataflow": mp.local.dataflow.name,
+                          "block": list(mp.local.block or DEFAULT_BLOCK),
+                          "strip": mp.local.strip,
+                          "gemm": [lshape.M, lshape.K, lshape.N]},
+                "hbm_bytes_per_chip": hbm,
+            },
+        })
+    return rows
+
+
 def verify_traffic(shapes: list[GemmShape]) -> int:
     """Assert the strip-aware analytical model agrees with a walk over the
     exact grids/index maps the kernels emit (Pallas revisiting semantics):
@@ -258,6 +300,11 @@ def main() -> None:
     ap.add_argument("--verify-traffic", action="store_true",
                     help="assert the analytical strip model matches the "
                          "kernel schedule walk, then exit (CI perf smoke)")
+    ap.add_argument("--mesh", default="",
+                    help="'DxM' data x model grid (e.g. 1x8): add mesh-"
+                         "composition columns — per-layer mesh dataflow, "
+                         "ICI comm bytes/chip from the mesh cost model, and "
+                         "per-chip HBM bytes of the local shard GEMMs")
     args = ap.parse_args()
     if args.dry_run:
         args.tokens, args.d_model, args.d_ff, args.iters = 64, 64, 128, 1
@@ -272,7 +319,12 @@ def main() -> None:
               f"walk on {n} (dataflow, block, strip) schedules")
         return
 
-    plan = autotune_plan(gemms, top_k=2, iters=1, train=True)
+    mesh_spec = None
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        mesh_spec = MeshSpec(axes=(("data", d), ("model", m)),
+                             dp_axes=("data",))
+    plan = autotune_plan(gemms, top_k=2, iters=1, train=True, mesh=mesh_spec)
 
     print(f"{'layer':8} {'gemm (M,K,N)':>18} {'fwd':>7} {'dX':>9} {'dW':>9}")
     for lp in plan.layers:
@@ -352,10 +404,27 @@ def main() -> None:
               f"{s['partial_rw_bytes']:,} B) | "
               f"OS {o['hbm_bytes']:>14,} B")
 
+    mrows = None
+    if mesh_spec is not None:
+        mrows = mesh_rows(plan)
+        print(f"mesh composition ({args.mesh} grid, tp={mesh_spec.tp}):")
+        for row in mrows:
+            mp = row["mesh"]
+            if mp is None:
+                print(f"  {row['name']:8} (does not divide the mesh — "
+                      "single-device fallback)")
+                continue
+            loc = mp["local"]
+            print(f"  {row['name']:8} mesh-{mp['dataflow']:2} local "
+                  f"{loc['dataflow']}/{tuple(loc['gemm'])} "
+                  f"ICI {mp['ici_comm_bytes']:>12,} B/chip  "
+                  f"HBM {mp['hbm_bytes_per_chip']:>12,} B/chip")
+
     if args.json:
         record = {
             "config": {"tokens": T, "d_model": D, "d_ff": F,
-                       "iters": args.iters, "interpret": True},
+                       "iters": args.iters, "interpret": True,
+                       "mesh": args.mesh or None},
             "layers": [
                 {
                     "name": lp.name,
@@ -372,6 +441,7 @@ def main() -> None:
                            "pallas_copy_bwd": tc, "xla": tr},
             "hbm_bytes_est": {**hbm, **strips},
             "strip_showcase": showcase,
+            "mesh_composition": mrows,
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)

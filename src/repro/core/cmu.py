@@ -56,6 +56,7 @@ from .dataflow import (
     systolic_cycles,
     tune_kernel_dataflow,
 )
+from .dist_dataflow import MeshSpec, best_mesh_dataflow
 
 
 class EpilogueSig(NamedTuple):
@@ -132,6 +133,58 @@ class GemmPlan:
 
 
 @dataclass(frozen=True)
+class MeshPlan:
+    """The second CMU planning level: how one layer's GEMM is composed
+    across the mesh's tensor axis, and the local per-shard kernel geometry
+    under that composition.
+
+    ``dataflow`` is the *mesh-level* stationarity (``dist_dataflow``): WS
+    emits all-gather(A) + reduce-scatter(C) around the weight-sharded local
+    kernel, IS all-gathers the weight shard, OS runs the rotating
+    collective-permute SUMMA schedule.  ``local`` / ``local_dx`` /
+    ``local_dw`` are chip-level ``GemmPlan``s tuned for the
+    *post-collective* shard shapes (``mesh_local_gemm``) — the shapes the
+    pallas_call inside the shard_map actually sees.
+    """
+
+    dataflow: Dataflow          # mesh-level stationarity
+    axis: str                   # tensor-axis name the collectives run over
+    tp: int                     # its extent when planned
+    dp: int                     # data-parallel degree when planned
+    local: GemmPlan             # local per-shard forward GEMM geometry
+    local_dx: GemmPlan | None = None  # local backward sub-geometries
+    local_dw: GemmPlan | None = None
+    comm_bytes: int = 0         # modeled ICI bytes/chip (mesh cost model)
+
+    def to_row(self) -> dict:
+        return {
+            "dataflow": self.dataflow.name,
+            "axis": self.axis,
+            "tp": self.tp,
+            "dp": self.dp,
+            "comm_bytes": self.comm_bytes,
+            "local": self.local.to_row(),
+            "local_dx": self.local_dx.to_row() if self.local_dx else None,
+            "local_dw": self.local_dw.to_row() if self.local_dw else None,
+        }
+
+    @classmethod
+    def from_row(cls, row: dict | None) -> "MeshPlan | None":
+        if row is None:
+            return None
+        return cls(
+            dataflow=Dataflow[row["dataflow"]],
+            axis=row["axis"],
+            tp=int(row["tp"]),
+            dp=int(row["dp"]),
+            local=GemmPlan.from_row(row["local"]),
+            local_dx=GemmPlan.from_row(row.get("local_dx")),
+            local_dw=GemmPlan.from_row(row.get("local_dw")),
+            comm_bytes=int(row.get("comm_bytes") or 0),
+        )
+
+
+@dataclass(frozen=True)
 class LayerPlan:
     name: str
     gemm: GemmShape
@@ -143,14 +196,18 @@ class LayerPlan:
     bwd_dx: GemmPlan | None = None  # dX = dY @ W^T, an (M,N)x(N,K) GEMM
     bwd_dw: GemmPlan | None = None  # dW = X^T @ dY, a (K,M)x(M,N) GEMM
     strip: int = 1  # forward accumulator-strip depth (1 = streamed)
+    # mesh sub-plan: the distributed composition (None = single-device only)
+    mesh: MeshPlan | None = None
 
 
 @dataclass
 class DataflowPlan:
     """The CMU's program: one dataflow (+ block shape) per layer, decided
-    pre-deployment."""
+    pre-deployment.  ``mesh`` records the mesh fingerprint the per-layer
+    mesh sub-plans were tuned for (None = single-device plan)."""
 
     layers: list[LayerPlan] = field(default_factory=list)
+    mesh: MeshSpec | None = None
 
     def get(self, name: str) -> LayerPlan | None:
         for l in self.layers:
@@ -192,6 +249,7 @@ class DataflowPlan:
                     "strip": l.strip,
                     "bwd_dx": l.bwd_dx.to_row() if l.bwd_dx else None,
                     "bwd_dw": l.bwd_dw.to_row() if l.bwd_dw else None,
+                    "mesh": l.mesh.to_row() if l.mesh else None,
                 }
                 for l in self.layers
             ],
@@ -215,6 +273,7 @@ class DataflowPlan:
                     strip=int(row.get("strip") or 1),
                     bwd_dx=GemmPlan.from_row(row.get("bwd_dx")),
                     bwd_dw=GemmPlan.from_row(row.get("bwd_dw")),
+                    mesh=MeshPlan.from_row(row.get("mesh")),
                 )
             )
         return plan
@@ -460,6 +519,78 @@ def _tune_gemm(
                     source="analytical", trans=trans, strip=strip)
 
 
+def mesh_local_gemm(gemm: GemmShape, mesh_df: Dataflow, tp: int,
+                    dp: int = 1) -> GemmShape:
+    """The *post-collective* per-shard GEMM a mesh dataflow hands the local
+    kernel, for a global forward ``C[M,N] = A[M,K] @ B[K,N]`` with tokens
+    sharded over ``dp * tp`` chips and the weight K-sharded over ``tp``:
+
+      WS: the all-gather rebuilds the DP group's full token block and the
+          local kernel contracts only this chip's K shard — (M/dp, K/tp, N);
+      IS: tokens stay put, the gathered weight is whole — (M/(dp*tp), K, N);
+      OS: one rotation step's partial GEMM — (M/(dp*tp), K/tp, N).
+    """
+    M, K, N = gemm.M, gemm.K, gemm.N
+    if mesh_df is Dataflow.WS:
+        return GemmShape(M // dp, K // tp, N, name=gemm.name + ".shard")
+    if mesh_df is Dataflow.IS:
+        return GemmShape(M // (dp * tp), K, N, name=gemm.name + ".shard")
+    if mesh_df is Dataflow.OS:
+        return GemmShape(M // (dp * tp), K // tp, N, name=gemm.name + ".shard")
+    raise ValueError(mesh_df)  # pragma: no cover
+
+
+def mesh_shardable(gemm: GemmShape, tp: int, dp: int = 1) -> bool:
+    """Whether the distributed path can run this GEMM at all: the token dim
+    must divide the full ``dp * tp`` grid and K the tensor axis (the weight
+    arrives K-sharded in every mesh dataflow).  The same predicate gates
+    both planning (no mesh sub-plan is emitted for a non-dividing layer)
+    and trace-time routing (``models.layers.linear`` falls back cleanly)."""
+    return tp > 1 and gemm.M % (dp * tp) == 0 and gemm.K % tp == 0
+
+
+def _tune_mesh(
+    gemm: GemmShape,
+    mesh: MeshSpec,
+    *,
+    train: bool,
+    epilogue: "bool | EpilogueSig",
+    **tune_kw,
+) -> MeshPlan | None:
+    """Plan one layer's mesh composition: pick the mesh-level dataflow with
+    the analytical ICI model (``best_mesh_dataflow`` — CPU cannot measure
+    ICI, so this level stays shape-driven, exactly the paper's offline
+    argument), then tune the local per-shard kernel geometry for the
+    post-collective shapes with the full measured chip-level CMU.
+
+    Only mesh-IS keeps the fused epilogue in-kernel (the gathered weight
+    makes the local GEMM the whole layer); WS/OS apply it post-reduction,
+    so their local candidates are timed bare.  Returns None when the layer
+    doesn't divide the mesh (``mesh_shardable``) — the dispatch then falls
+    back to the single-device plan row.
+    """
+    tp, dp = mesh.tp, mesh.dp
+    if not mesh_shardable(gemm, tp, dp):
+        return None
+    per_dp = GemmShape(gemm.M // dp, gemm.K, gemm.N, name=gemm.name)
+    mesh_df, cost = best_mesh_dataflow(per_dp, tp)
+    local_shape = mesh_local_gemm(gemm, mesh_df, tp, dp)
+    local = _tune_gemm(
+        local_shape,
+        epilogue=epilogue if mesh_df is Dataflow.IS else False,
+        **tune_kw,
+    )
+    dx = dw = None
+    if train:
+        g_dx, g_dw = bwd_gemms(local_shape)
+        dx = _tune_gemm(g_dx, epilogue=False, trans=TRANS_DX, **tune_kw)
+        dw = _tune_gemm(g_dw, epilogue=False, trans=TRANS_DW, **tune_kw)
+    return MeshPlan(
+        dataflow=mesh_df, axis=mesh.tensor_axis, tp=tp, dp=dp,
+        local=local, local_dx=dx, local_dw=dw, comm_bytes=cost.comm_bytes,
+    )
+
+
 def autotune_plan(
     gemms: list[GemmShape],
     *,
@@ -470,6 +601,7 @@ def autotune_plan(
     interpret: bool | None = None,
     epilogue: "bool | EpilogueSig | dict[str, EpilogueSig | None]" = False,
     train: bool = False,
+    mesh: MeshSpec | None = None,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
@@ -495,6 +627,13 @@ def autotune_plan(
     transposed-variant kernels and the copy-based fallback with its
     transpose cost included (see ``_tune_gemm``) — and land in
     ``LayerPlan.bwd_dx`` / ``bwd_dw`` with their winning ``trans``.
+
+    With ``mesh`` (a ``MeshSpec`` fingerprint) every layer additionally
+    gets a **mesh sub-plan** (``_tune_mesh``): the mesh-level stationarity
+    from the analytical ICI model plus the local per-shard kernel geometry
+    tuned for the post-collective shapes.  The single-device decisions
+    above are still tuned for the global geometry — they remain the
+    dispatch for layers the mesh can't divide.
     """
     if interpret is None:
         from repro.kernels import ops
@@ -502,7 +641,7 @@ def autotune_plan(
         interpret = ops.default_interpret()
     kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
               iters=iters, interpret=interpret)
-    plan = DataflowPlan()
+    plan = DataflowPlan(mesh=mesh)
     for gemm in gemms:
         sig = epilogue.get(gemm.name) if isinstance(epilogue, dict) else epilogue
         fwd = _tune_gemm(gemm, epilogue=sig or False, **kw)
@@ -511,12 +650,50 @@ def autotune_plan(
             g_dx, g_dw = bwd_gemms(gemm)
             dx = _tune_gemm(g_dx, epilogue=False, trans=TRANS_DX, **kw)
             dw = _tune_gemm(g_dw, epilogue=False, trans=TRANS_DW, **kw)
+        mp = None
+        if mesh is not None:
+            mp = _tune_mesh(gemm, mesh, train=train, epilogue=sig or False,
+                            **kw)
         plan.layers.append(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
-                      bwd_dx=dx, bwd_dw=dw, strip=fwd.strip)
+                      bwd_dx=dx, bwd_dw=dw, strip=fwd.strip, mesh=mp)
         )
     return plan
+
+
+def add_mesh_subplans(
+    plan: DataflowPlan,
+    mesh: MeshSpec,
+    *,
+    train: bool = False,
+    epilogue: "bool | EpilogueSig | dict[str, EpilogueSig | None]" = False,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    top_k: int = 3,
+    measure: bool = True,
+    iters: int = 2,
+    interpret: bool | None = None,
+    **_ignored,
+) -> DataflowPlan:
+    """Upgrade a plan for a (new) mesh **incrementally**: every
+    single-device decision — forward rows and backward sub-plans — is kept
+    verbatim (so a migrated v1–v4 cache keeps dispatching bit-for-bit on
+    layers that fall back), and only the mesh sub-plans are (re)tuned for
+    ``mesh``'s post-collective shapes."""
+    import dataclasses
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
+              iters=iters, interpret=interpret)
+    out = DataflowPlan(mesh=mesh)
+    for l in plan.layers:
+        sig = epilogue.get(l.name) if isinstance(epilogue, dict) else epilogue
+        mp = _tune_mesh(l.gemm, mesh, train=train, epilogue=sig or False, **kw)
+        out.layers.append(dataclasses.replace(l, mesh=mp))
+    return out
 
 
 def add_bwd_subplans(
@@ -532,7 +709,8 @@ def add_bwd_subplans(
     """Upgrade a forward-only plan for training **incrementally**: keep every
     already-tuned forward decision (measurements are expensive) and tune only
     the missing dX/dW sub-GEMMs.  Layers that already carry both sub-plans
-    are passed through untouched."""
+    are passed through untouched, and the plan's mesh fingerprint (plus any
+    per-layer mesh sub-plans) is preserved."""
     import dataclasses
 
     if interpret is None:
@@ -541,7 +719,7 @@ def add_bwd_subplans(
         interpret = ops.default_interpret()
     kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
               iters=iters, interpret=interpret, epilogue=False)
-    out = DataflowPlan()
+    out = DataflowPlan(mesh=plan.mesh)
     for l in plan.layers:
         if l.bwd_dx is not None and l.bwd_dw is not None:
             out.layers.append(l)

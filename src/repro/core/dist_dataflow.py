@@ -1,28 +1,63 @@
 """Mesh-level dataflow selection — the Flex-TPU insight promoted to the pod.
 
-For a GEMM sharded over a `model`-axis of size T, there are three classic
-SPMD strategies, and they are exactly the paper's three stationarities one
-more level up the hierarchy (chip <-> PE, ICI <-> systolic wiring):
+For a GEMM ``C[M,N] = A[M,K] @ B[K,N]`` whose tokens (M) are sharded over a
+``model``-axis of size T and whose weight is K-sharded over the same axis,
+there are three classic SPMD strategies, and they are exactly the paper's
+three stationarities one more level up the hierarchy (chip <-> PE,
+ICI <-> systolic wiring).  ``kernels.mesh_ops`` implements precisely these
+schedules around the local Pallas kernels, and the byte formulas below are
+the bytes those schedules put on the wire (per chip, ring collectives,
+``r = (T-1)/T``):
 
   WS (weight-stationary / tensor parallel):
-      weights stay sharded on their chips; activations are all-gathered in
-      and partial outputs reduce-scattered out.
-      comm_bytes = allgather(A) + reducescatter(C)  ~  M*K + M*N   (per chip x (T-1)/T)
+      weight shards never move; the activations are all-gathered in and the
+      partial outputs reduce-scattered back out.  Both collectives sit on
+      the critical path: A is produced by the previous layer (no prefetch)
+      and C's reduction must finish before the epilogue.  The partials
+      cross the wire in **f32** (4 bytes — the ICI analogue of the
+      kernels' f32-accumulate policy), whatever the input dtype.
+      comm_bytes    = allgather(A) + reducescatter(C_f32)
+                    = (M*K*b + M*N*4) * r
+      gather_bytes  = M*K*b      (full A materialised per chip)
   IS (input-stationary / weight-gathered, ZeRO-3 style):
-      activations stay put (sharded over tokens); weight shards are
-      all-gathered to every chip.
-      comm_bytes = allgather(B)                      ~  K*N
-  OS (output-stationary):
-      both A and B arrive as shards that already match the local output
-      block (2D-sharded "SUMMA" step); partials accumulate locally,
-      collective-permute rotates the shards.
-      comm_bytes = rotate(A) + rotate(B)             ~  M*K + K*N  (pipelined)
+      activations stay put (sharded over tokens); the weight shards are
+      all-gathered to every chip.  Weights are static parameters, so the
+      gather is prefetchable (issued during the previous layer's compute —
+      the standard ZeRO-3 overlap), i.e. the comm pipelines against
+      compute.
+      comm_bytes    = allgather(B) = K*N * b * r
+      gather_bytes  = K*N*b      (the full weight materialised per chip)
+  OS (output-stationary / SUMMA ring rotation):
+      nothing is gathered: each chip's output shard stays resident while
+      the K-sharded weight rotates around the ring (collective-permute),
+      one local partial GEMM per rotation step, partials accumulating
+      locally.  A's matching k-slices are already local (the token shard
+      carries full K), so only B moves.  Same total wire bytes as the IS
+      gather, but delivered in T-1 pipelined hops with only a
+      double-buffered shard resident — the dataflow that stays feasible
+      when the gathered weight would not fit.
+      comm_bytes    = rotate(B) = K*N * b * r      (pipelined, ring-period
+                      floor K*N*b/bw when comm-bound)
+      gather_bytes  = 2 * K*N*b / T  (double-buffered rotating shard)
 
-The optimum depends on layer shape exactly as in the paper: training steps
-(M = tokens >> K,N/T) prefer IS (gather the small weights), decode steps
-(M ~ batch) prefer WS (move the tiny activations), and square-ish cases with
-huge both prefer OS rotation.  ``plan_mesh`` is the CMU at mesh level: a
-pure shape-driven offline decision, emitted into the model's sharding config.
+The optimum depends on layer shape exactly as in the paper:
+
+  * decode steps (M ~ batch << K, N) -> WS: moving the tiny activations
+    costs almost nothing, the weights never move at all;
+  * training steps (M = tokens >> K*N/(K+N), weights fit the gather
+    budget) -> IS: gather the small static weights once, keep the fused
+    local kernel (mesh-IS is the only schedule whose epilogue stays
+    in-kernel);
+  * square-ish layers where both operands are huge (the gathered weight
+    exceeds ``MESH_GATHER_BUDGET_BYTES``) -> OS rotation: WS would
+    materialise full A and IS full B, both infeasible — the ring keeps
+    per-chip residency at 1/T and hides the rotation under the step
+    compute.
+
+``plan_mesh`` is the CMU at mesh level: a pure shape-driven offline
+decision, emitted into the model's sharding config.  The local per-shard
+GEMM geometry under each mesh choice is tuned by the chip-level CMU
+(``cmu.autotune_plan(mesh=...)``).
 """
 
 from __future__ import annotations
@@ -31,53 +66,175 @@ from dataclasses import dataclass
 
 from .dataflow import ALL_DATAFLOWS, Dataflow, GemmShape
 
+# Per-chip HBM headroom a mesh dataflow may spend on *materialised gathered
+# operands* (the full A for WS, the full B for IS).  Weights, optimizer
+# state, and activations own most of a chip's HBM; a per-layer gather
+# beyond this is how ZeRO-3 runs out of memory mid-step, so the planner
+# treats it as infeasible rather than merely slow.
+MESH_GATHER_BUDGET_BYTES = 256 * 1024**2
+
 
 @dataclass(frozen=True)
 class MeshGemmCost:
     dataflow: Dataflow
-    comm_bytes: int      # ICI bytes per chip for this layer
+    comm_bytes: int      # ICI bytes per chip this layer puts on the wire
     flops_per_chip: int
+    gather_bytes: int    # per-chip HBM the schedule materialises
+    pipelined: bool      # comm structurally overlaps compute (IS prefetch,
+                         # OS rotation); WS's collectives are exposed
+    ring_steps: int = 1  # kernel launches per layer (OS: one per rotation)
 
     def time_s(
         self, peak_flops: float = 197e12, ici_bw: float = 50e9, overlap: float = 0.0
     ) -> float:
-        """Step time with `overlap` in [0,1] fraction of comm hidden under compute."""
+        """Step time.  Pipelined dataflows run at ``max(compute, comm)``
+        (the OS ring's comm floor is the full ring period,
+        ``comm * T/(T-1)``); WS exposes its collectives, hidden only by the
+        caller-asserted ``overlap`` fraction in [0, 1]."""
         t_c = self.flops_per_chip / peak_flops
         t_m = self.comm_bytes / ici_bw
+        if self.pipelined:
+            if self.ring_steps > 1:  # ring period: T hops pay (T-1) transfers
+                t_m *= self.ring_steps / (self.ring_steps - 1)
+            return max(t_c, t_m)
         return max(t_c, t_m) if overlap >= 1.0 else t_c + (1 - overlap) * t_m
 
 
 def mesh_gemm_cost(
     shape: GemmShape, dataflow: Dataflow, tp: int, bytes_per_el: int = 2
 ) -> MeshGemmCost:
-    """ICI bytes/chip + FLOPs/chip for C[M,N] = A[M,K] @ B[K,N] over tp chips."""
+    """ICI bytes/chip + FLOPs/chip for C[M,N] = A[M,K] @ B[K,N] over tp chips.
+
+    ``shape`` is the per-data-parallel-group GEMM (tokens already divided by
+    the DP degree); ``tp`` is the tensor/model-axis extent the schedule's
+    collectives run over.  The formulas are the wire bytes of the schedules
+    ``kernels.mesh_ops`` actually emits — see the module docstring.
+    """
     M, K, N = shape.M, shape.K, shape.N
-    ring = (tp - 1) / tp  # ring all-gather / reduce-scatter factor
+    b = bytes_per_el
+    ring = (tp - 1) / tp  # ring all-gather / reduce-scatter / rotation factor
     if dataflow is Dataflow.WS:
-        comm = (M * K + M * N) * bytes_per_el * ring
+        # the reduce-scattered partials are f32 on the wire regardless of
+        # the input dtype (kernels/mesh_ops psum-scatters the f32 partial)
+        comm = (M * K * b + M * N * 4) * ring
+        gather = M * K * b
+        pipelined, steps = False, 1
     elif dataflow is Dataflow.IS:
-        comm = (K * N) * bytes_per_el * ring
+        comm = (K * N) * b * ring
+        gather = K * N * b
+        pipelined, steps = True, 1
     elif dataflow is Dataflow.OS:
-        comm = (M * K / tp + K * N / tp) * bytes_per_el * (tp - 1)
+        comm = (K * N) * b * ring
+        gather = 2 * K * N * b // tp
+        pipelined, steps = True, tp
     else:  # pragma: no cover
         raise ValueError(dataflow)
     return MeshGemmCost(
         dataflow=dataflow,
         comm_bytes=int(comm),
         flops_per_chip=shape.flops // tp,
+        gather_bytes=int(gather),
+        pipelined=pipelined,
+        ring_steps=steps,
     )
 
 
 def best_mesh_dataflow(
-    shape: GemmShape, tp: int, overlap: float = 0.0
+    shape: GemmShape,
+    tp: int,
+    overlap: float = 0.0,
+    gather_budget: int = MESH_GATHER_BUDGET_BYTES,
 ) -> tuple[Dataflow, MeshGemmCost]:
+    """Mesh-level argmin for one GEMM.
+
+    A dataflow whose ``gather_bytes`` exceed ``gather_budget`` is
+    infeasible (it would materialise an operand that does not fit the
+    per-chip headroom), not merely slow.  Time ties break toward fewer
+    kernel launches (a fused full-K local GEMM beats tp rotation steps)
+    and then toward fewer wire bytes — so compute-bound training shapes
+    resolve to IS, as the gathered weight keeps the epilogue in-kernel.
+    OS is always kept feasible as the escape hatch: its residency is the
+    smallest any schedule can achieve.
+    """
     costs = {df: mesh_gemm_cost(shape, df, tp) for df in ALL_DATAFLOWS}
-    best = min(costs, key=lambda d: costs[d].time_s(overlap=overlap))
+    feasible = {
+        df: c for df, c in costs.items()
+        if c.gather_bytes <= gather_budget or df is Dataflow.OS
+    }
+    best = min(
+        feasible,
+        key=lambda d: (
+            feasible[d].time_s(overlap=overlap),
+            feasible[d].ring_steps,
+            feasible[d].comm_bytes,
+        ),
+    )
     return best, costs[best]
 
 
 def plan_mesh(
-    gemms: list[GemmShape], tp: int, overlap: float = 0.0
+    gemms: list[GemmShape],
+    tp: int,
+    overlap: float = 0.0,
+    gather_budget: int = MESH_GATHER_BUDGET_BYTES,
 ) -> dict[str, Dataflow]:
     """Mesh-level CMU: per-layer stationary-operand choice for a TP degree."""
-    return {g.name: best_mesh_dataflow(g, tp, overlap)[0] for g in gemms}
+    return {
+        g.name: best_mesh_dataflow(g, tp, overlap, gather_budget)[0]
+        for g in gemms
+    }
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Fingerprint of the mesh a plan was tuned for — axis names x extents
+    plus which axes play the tensor and data-parallel roles.  Deliberately
+    jax-free (a plain record, not a ``jax.sharding.Mesh``) so the CMU and
+    the plan cache stay importable without device state; build one from a
+    live mesh with ``from_mesh``.
+    """
+
+    axes: tuple[tuple[str, int], ...]
+    tensor_axis: str = "model"
+    dp_axes: tuple[str, ...] = ("pod", "data")
+
+    @property
+    def tp(self) -> int:
+        return dict(self.axes).get(self.tensor_axis, 1)
+
+    @property
+    def dp(self) -> int:
+        ext = dict(self.axes)
+        out = 1
+        for a in self.dp_axes:
+            out *= ext.get(a, 1)
+        return out
+
+    @classmethod
+    def from_mesh(cls, mesh, tensor_axis: str = "model",
+                  dp_axes: tuple[str, ...] = ("pod", "data")) -> "MeshSpec":
+        """From anything with ``.axis_names`` and a ``.shape`` mapping
+        (a ``jax.sharding.Mesh``, or a stand-in in tests)."""
+        names = tuple(mesh.axis_names)
+        return cls(
+            axes=tuple((a, int(mesh.shape[a])) for a in names),
+            tensor_axis=tensor_axis,
+            dp_axes=tuple(a for a in dp_axes if a in names),
+        )
+
+    def to_row(self) -> dict:
+        return {
+            "axes": [[a, e] for a, e in self.axes],
+            "tensor_axis": self.tensor_axis,
+            "dp_axes": list(self.dp_axes),
+        }
+
+    @classmethod
+    def from_row(cls, row: dict | None) -> "MeshSpec | None":
+        if row is None:
+            return None
+        return cls(
+            axes=tuple((str(a), int(e)) for a, e in row["axes"]),
+            tensor_axis=row["tensor_axis"],
+            dp_axes=tuple(row["dp_axes"]),
+        )

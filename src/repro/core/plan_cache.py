@@ -25,8 +25,20 @@ Schema versions (see docs/autotune.md for the full JSON shape):
     carries ``strip``, the WS/IS accumulator-strip depth: 1 is the
     streamed schedule (partial sums through HBM — all pre-v4 plans ran
     this), >= 2 the two-level schedule with a VMEM-resident strip.
+  * v5 — the payload carries a top-level ``mesh`` fingerprint (axis names x
+    extents + tensor/dp roles, or null for single-device plans) and each
+    layer may carry a ``mesh`` sub-plan: the mesh-level dataflow (the
+    collective schedule ``kernels.mesh_ops`` wraps around the local
+    kernel) plus the local per-shard GEMM geometry tuned for the
+    post-collective shapes.  A cached plan only matches when its mesh
+    fingerprint equals the requested one — a plan tuned for a 2x4 mesh is
+    never silently applied to an 8x1.
 
-Older files still **load and migrate**: v1 rows are a strict subset (the
+Older files still **load and migrate**: v1–v4 files load as single-device
+plans (``mesh`` comes back None everywhere), so their dispatch is
+bit-for-bit what it was — the mesh axis only enters via an incremental
+upgrade (``add_mesh_subplans``, which keeps every single-device decision
+verbatim) or a re-tune.  v1 rows are a strict subset (the
 backward sub-plans come back as None); v2 backward sub-plans — tuned on
 pre-transposed operands, so their (dataflow, block) remains valid for the
 same logical GEMM — are migrated to the zero-copy layout of their role
@@ -52,11 +64,19 @@ from __future__ import annotations
 import json
 import os
 
-from .cmu import TRANS_DX, TRANS_DW, DataflowPlan, add_bwd_subplans, autotune_plan
+from .cmu import (
+    TRANS_DX,
+    TRANS_DW,
+    DataflowPlan,
+    add_bwd_subplans,
+    add_mesh_subplans,
+    autotune_plan,
+)
+from .dist_dataflow import MeshSpec
 
-PLAN_CACHE_VERSION = 4
+PLAN_CACHE_VERSION = 5
 # older schemas this build can still read and migrate
-COMPATIBLE_VERSIONS = (1, 2, 3, 4)
+COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -64,7 +84,11 @@ _ACTIVE_PLAN: DataflowPlan | None = None
 def save_plan(path: str, plan: DataflowPlan) -> None:
     """Persist a plan as versioned JSON (atomic rename, so a crashed tune
     never leaves a half-written cache for the next launch to trip on)."""
-    payload = {"version": PLAN_CACHE_VERSION, "layers": json.loads(plan.to_json())}
+    payload = {
+        "version": PLAN_CACHE_VERSION,
+        "mesh": plan.mesh.to_row() if plan.mesh else None,
+        "layers": json.loads(plan.to_json()),
+    }
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     tmp = path + ".tmp"
@@ -93,18 +117,28 @@ def load_plan(path: str) -> DataflowPlan:
         import logging
 
         migrated = _migrate_rows(layers, version)
+        if migrated:
+            note = (f"{migrated} decisions migrated (zero-copy layouts / "
+                    "strip=1 streamed semantics); single-device dispatch "
+                    "unchanged, mesh sub-plans absent")
+        elif version >= 2:
+            note = ("rows are a structural subset — single-device dispatch "
+                    "unchanged, mesh sub-plans absent")
+        else:
+            note = "backward sub-plans absent — training will re-tune"
         logging.getLogger(__name__).info(
             "plan cache %s uses schema v%d; loaded as v%d (%s)",
-            path, version, PLAN_CACHE_VERSION,
-            f"{migrated} decisions migrated (zero-copy layouts / strip=1 "
-            "streamed semantics)"
-            if migrated else "backward sub-plans absent — training will re-tune",
+            path, version, PLAN_CACHE_VERSION, note,
         )
-    return DataflowPlan.from_json(json.dumps(layers))
+    plan = DataflowPlan.from_json(json.dumps(layers))
+    plan.mesh = MeshSpec.from_row(payload.get("mesh"))
+    return plan
 
 
 def _migrate_rows(layers: list[dict], version: int) -> int:
-    """In-place v1/v2/v3 -> v4 row migration; returns migrated field count.
+    """In-place v1/v2/v3 -> v5 row migration; returns migrated field count.
+    v4 rows need no edits: v5 only *adds* the optional mesh fields, which
+    absent keys already decode as None (single-device).
 
     v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
     the copy-based path minus the copy — their (dataflow, block) stays valid
@@ -139,20 +173,27 @@ def _migrate_rows(layers: list[dict], version: int) -> int:
     return migrated
 
 
-def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False) -> bool:
+def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
+                 mesh: MeshSpec | None = None) -> bool:
     """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
     the guard against silently applying a cache tuned for another arch or
     batch geometry.  With ``require_bwd`` the plan must also carry backward
-    sub-plans for every layer (the training bar)."""
+    sub-plans for every layer (the training bar).  With ``mesh`` the plan's
+    mesh fingerprint must equal the requested one (a plan tuned for another
+    mesh topology is stale at the mesh level); a mesh-tuned plan still
+    matches a single-device request — its single-device rows are intact and
+    the mesh sub-plans are simply never consulted."""
     planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
     wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
     if planned != wanted:
+        return False
+    if mesh is not None and plan.mesh != mesh:
         return False
     return plan.has_bwd() if require_bwd else True
 
 
 def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
-                     **autotune_kw):
+                     mesh: MeshSpec | None = None, **autotune_kw):
     """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
     matches ``gemms``, otherwise a fresh autotune persisted to ``path``
     (when given).  A cache tuned for different GEMM shapes (other arch,
@@ -160,10 +201,14 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     run needs (``require_bwd``), is re-tuned and overwritten, not silently
     applied.  A cache whose *forward* decisions match but which lacks the
     sub-plans is upgraded incrementally (only the dX/dW GEMMs are tuned —
-    the measured forward decisions are kept)."""
+    the measured forward decisions are kept).  Likewise a cache whose
+    single-device decisions match but whose mesh fingerprint differs from
+    ``mesh`` (a migrated v1–v4 file, or a cache tuned for another topology)
+    is upgraded incrementally: only the mesh sub-plans are tuned, every
+    single-device decision is kept verbatim."""
     if path and os.path.exists(path):
         plan = load_plan(path)
-        if plan_matches(plan, gemms, require_bwd=require_bwd):
+        if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh):
             if autotune_kw.get("epilogue"):
                 import logging
 
@@ -179,18 +224,30 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
 
         log = logging.getLogger(__name__)
         if plan_matches(plan, gemms):
-            # fwd decisions are valid — tune only the missing bwd sub-GEMMs
-            log.warning(
-                "plan cache %s lacks backward sub-plans; tuning dX/dW only "
-                "(keeping the forward decisions)", path
-            )
-            plan = add_bwd_subplans(plan, **autotune_kw)
+            # single-device fwd decisions are valid — upgrade incrementally
+            added_bwd = False
+            if not plan_matches(plan, gemms, require_bwd=require_bwd):
+                log.warning(
+                    "plan cache %s lacks backward sub-plans; tuning dX/dW "
+                    "only (keeping the forward decisions)", path
+                )
+                plan = add_bwd_subplans(plan, **autotune_kw)
+                added_bwd = True  # mesh locals (if any) also lack bwd
+            if mesh is not None and (plan.mesh != mesh or added_bwd):
+                log.warning(
+                    "plan cache %s was tuned for mesh %s, not %s; tuning "
+                    "mesh sub-plans only (keeping every single-device "
+                    "decision)", path,
+                    plan.mesh.axes if plan.mesh else None, mesh.axes,
+                )
+                plan = add_mesh_subplans(plan, mesh, train=require_bwd,
+                                         **autotune_kw)
             save_plan(path, plan)
             return plan, False
         log.warning(
             "plan cache %s was tuned for different GEMM shapes; re-tuning", path
         )
-    plan = autotune_plan(gemms, train=require_bwd, **autotune_kw)
+    plan = autotune_plan(gemms, train=require_bwd, mesh=mesh, **autotune_kw)
     if path:
         save_plan(path, plan)
     return plan, False

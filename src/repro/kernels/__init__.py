@@ -10,6 +10,7 @@ from .flex_matmul import (
     matmul_os,
     matmul_ws,
 )
+from .mesh_ops import flex_linear_sharded
 from .ops import auto_matmul, default_interpret, flex_linear, flex_matmul
 from .ref import attention_ref, blocked_matmul_ref, linear_ref, matmul_ref
 
@@ -22,6 +23,7 @@ __all__ = [
     "default_interpret",
     "flash_attention",
     "flex_linear",
+    "flex_linear_sharded",
     "flex_matmul",
     "fused_matmul",
     "linear_ref",

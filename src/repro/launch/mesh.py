@@ -35,7 +35,18 @@ def dp_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def dp_size(mesh) -> int:
+def dp_size(mesh, axes: tuple[str, ...] | None = None) -> int:
+    """Data-parallel extent of ``mesh`` — the **canonical** definition.
+
+    ``axes`` names the mesh axes that play the DP role; None means the
+    production convention (``dp_axes``: whichever of 'pod'/'data' exist).
+    ``models.sharding.dp_size`` is the rules-context wrapper around this —
+    it resolves the active rules table's ``act_batch`` mapping and
+    delegates here, so the two can never drift (pinned by
+    tests/test_mesh_flex.py::test_dp_size_single_definition).
+    """
     import math
 
-    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
+    if axes is None:
+        axes = dp_axes(mesh)
+    return math.prod(mesh.shape[a] for a in axes if a in mesh.axis_names)

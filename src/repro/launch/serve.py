@@ -2,11 +2,19 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3_12b --smoke \
       --requests 8 --prompt-len 24 --gen 16
+
+Multi-device (the mesh-native flex kernel path; on CPU give jax virtual
+devices first):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --arch qwen3_4b --smoke --pallas \
+      --mesh 2x4 --requests 8 --prompt-len 32 --gen 4
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -15,6 +23,16 @@ import numpy as np
 
 from repro.launch.steps import make_decode_step, make_prefill_step, setup_plan_cache
 from repro.models import Model, get_config
+
+
+def parse_mesh(spec: str):
+    """'DxM' -> a ('data', 'model') mesh, e.g. '2x4'; '' -> None."""
+    if not spec:
+        return None
+    from repro.launch.mesh import make_mesh
+
+    d, m = (int(v) for v in spec.lower().split("x"))
+    return make_mesh((d, m), ("data", "model"))
 
 
 def main() -> None:
@@ -30,14 +48,35 @@ def main() -> None:
                     help="CMU plan JSON: reload if present, else autotune + save")
     ap.add_argument("--pallas", action="store_true",
                     help="dispatch projections to the fused flex kernels")
+    ap.add_argument("--mesh", default="",
+                    help="'DxM' data x model mesh (e.g. 2x4): serve "
+                         "multi-device — projections run the shard_map-"
+                         "composed mesh-native kernel path when --pallas")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.pallas:
         cfg = cfg.replace(use_pallas=True)
-    setup_plan_cache(args.plan_cache, cfg, args.requests * args.prompt_len)
+    mesh = parse_mesh(args.mesh)
+    if mesh is not None:
+        from repro.models.sharding import use_rules
+
+        rules_ctx = use_rules(mesh)
+    else:
+        rules_ctx = contextlib.nullcontext()
+    with rules_ctx:
+        _serve(args, cfg, mesh)
+
+
+def _serve(args, cfg, mesh) -> None:
+    setup_plan_cache(args.plan_cache, cfg, args.requests * args.prompt_len,
+                     mesh=mesh)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    if mesh is not None:
+        from repro.models.sharding import param_shardings
+
+        params = jax.device_put(params, param_shardings(params))
     prefill = jax.jit(make_prefill_step(model, cache_len=args.cache_len))
     decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
 

@@ -111,7 +111,7 @@ def make_decode_step(model: Model) -> Callable:
 
 
 def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True,
-                     train: bool = False):
+                     train: bool = False, mesh=None):
     """Program the CMU for a serve/train run.
 
     Loads the persisted ``DataflowPlan`` from ``path`` when it exists;
@@ -124,22 +124,37 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     Forward candidates are measured with each layer's actual fused-epilogue
     signature (``model_epilogues``), so the tuner times the op the model
     issues rather than the bare matmul.
-    Returns the plan (or None when no path given).
+
+    With ``mesh`` (a ``jax.sharding.Mesh`` the run executes under) the plan
+    additionally carries per-layer **mesh sub-plans** — the second CMU
+    level: mesh dataflow + local per-shard kernel geometry — keyed by the
+    mesh fingerprint (``MeshSpec``).  A cache tuned for another topology
+    (or a migrated single-device v1–v4 file) is upgraded incrementally:
+    the single-device decisions are kept verbatim and only the mesh level
+    is tuned.  Returns the plan (or None when no path given).
     """
     if not path:
         return None
     import logging
 
     from repro.core import (
+        MeshSpec,
         activate_plan,
         load_or_autotune,
         model_epilogues,
         model_gemms,
     )
 
+    mesh_spec = None
+    if mesh is not None:
+        from repro.launch.mesh import dp_axes
+
+        mesh_spec = MeshSpec.from_mesh(mesh, dp_axes=dp_axes(mesh))
+        if mesh_spec.tp <= 1:
+            mesh_spec = None  # no tensor axis to compose over
     gemms = model_gemms(cfg, tokens)
     plan, loaded = load_or_autotune(path, gemms, require_bwd=train,
-                                    measure=measure,
+                                    mesh=mesh_spec, measure=measure,
                                     epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
@@ -148,11 +163,14 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
         + sum(s.strip > 1 for s in (lp.bwd_dx, lp.bwd_dw) if s is not None)
         for lp in plan.layers
     )
+    meshed = {lp.mesh.dataflow.name for lp in plan.layers if lp.mesh}
     logging.getLogger(__name__).info(
-        "plan cache %s: %s (%d layers%s, histogram %s, %d strip schedules)",
+        "plan cache %s: %s (%d layers%s, histogram %s, %d strip schedules%s)",
         src, path, len(plan.layers),
         " incl. bwd sub-plans" if plan.has_bwd() else "", plan.histogram(),
         stripped,
+        f", mesh dataflows {sorted(meshed)} on {plan.mesh.axes}"
+        if plan.mesh else "",
     )
     return plan
 

@@ -53,6 +53,10 @@ def main() -> None:
                          "— to the fused flex kernels via the custom VJP; "
                          "the plan cache then carries per-layer fwd/dX/dW "
                          "sub-plans")
+    ap.add_argument("--mesh", default="",
+                    help="'DxM' data x model mesh (e.g. 2x4): train "
+                         "multi-device — with --pallas the projections run "
+                         "the shard_map-composed mesh-native kernel path")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
@@ -63,6 +67,23 @@ def main() -> None:
         cfg = cfg.replace(num_layers=args.layers)
     if args.pallas:
         cfg = cfg.replace(use_pallas=True)
+
+    import contextlib
+
+    from repro.launch.serve import parse_mesh
+
+    mesh = parse_mesh(args.mesh)
+    if mesh is not None:
+        from repro.models.sharding import use_rules
+
+        rules_ctx = use_rules(mesh)
+    else:
+        rules_ctx = contextlib.nullcontext()
+    with rules_ctx:
+        _train(args, cfg, mesh)
+
+
+def _train(args, cfg, mesh) -> None:
     mb = args.microbatches or microbatches_for(args.arch)
     mb = mb if args.global_batch % max(mb, 1) == 0 else 1
     # training plans group each layer's three GEMMs (fwd + dX + dW) so the
@@ -70,7 +91,7 @@ def main() -> None:
     # GEMM runs per microbatch, so that is the geometry to tune for
     setup_plan_cache(args.plan_cache, cfg,
                      args.global_batch // max(mb, 1) * args.seq,
-                     train=args.pallas)
+                     train=args.pallas, mesh=mesh)
     model = Model(cfg)
     total, active = cfg.param_count()
     print(f"arch={cfg.name} params={total/1e6:.1f}M (active {active/1e6:.1f}M)")
@@ -90,6 +111,10 @@ def main() -> None:
         params, opt = init_train_state(
             model, jax.random.PRNGKey(0), quantize_opt=use_quantized_opt(args.arch)
         )
+        if mesh is not None:
+            from repro.models.sharding import param_shardings
+
+            params = jax.device_put(params, param_shardings(params))
         return {"params": params, "opt": opt}
 
     times = []
@@ -123,8 +148,9 @@ def main() -> None:
     )
     state, step = runner.run()
     losses = [m["loss"] for m in runner.metrics_log]
-    print(f"done: {step} steps, restarts={runner.restarts}, "
-          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    trajectory = (f"loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses
+                  else "no new steps (checkpoint already at --steps)")
+    print(f"done: {step} steps, restarts={runner.restarts}, {trajectory}")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,15 @@ def linear(
     own dataflows.  Unplanned layers fall back to the trace-time roofline
     argmin.  Otherwise plain XLA ops (einsum + separate epilogue), the
     dry-run path.
+
+    When a rules context is active (``sharding.use_rules``) and the GEMM
+    divides the mesh, the Pallas path goes **mesh-native**: the layer runs
+    as a shard_map-composed collective schedule around the local flex
+    kernels (``kernels.mesh_ops.flex_linear_sharded``), with the mesh-level
+    dataflow and local per-shard geometry from the plan's ``mesh``
+    sub-plan (or the trace-time analytical argmin).  Layers that don't
+    divide the mesh fall back cleanly to the single-device kernel path —
+    the same contract as the attention shard_map path.
     """
     w = w.astype(x.dtype)
     if cfg.use_pallas:
@@ -58,6 +67,32 @@ def linear(
         r2 = None if residual is None else residual.reshape(-1, N)
         plan = active_plan()
         lp = plan.get(name) if (plan is not None and name) else None
+
+        from repro.models.sharding import active_mesh, spec_for, tensor_axis
+
+        mesh = active_mesh()
+        axis = tensor_axis() if mesh is not None else None
+        if axis is not None:
+            from repro.core.cmu import mesh_shardable
+            from repro.kernels.mesh_ops import flex_linear_sharded
+            from repro.launch.mesh import dp_size as mesh_dp_size
+
+            dp_axes = spec_for("act_batch")[0] or ()
+            dp_axes = ((dp_axes,) if isinstance(dp_axes, str)
+                       else tuple(dp_axes))
+            tp = int(mesh.shape[axis])
+            dp = mesh_dp_size(mesh, dp_axes)
+            gemm = GemmShape(x2.shape[0], K, N, name=name)
+            if mesh_shardable(gemm, tp, dp):
+                out = flex_linear_sharded(
+                    x2, w, None if b is None else b.astype(x.dtype),
+                    mesh=mesh, axis=axis, dp_axes=dp_axes,
+                    activation=activation, residual=r2,
+                    plan=lp.mesh if lp is not None else None,
+                    interpret=default_interpret(), out_dtype=x.dtype,
+                )
+                return out.reshape(*lead, N)
+
         bwd_dx = bwd_dw = None
         strip = 1
         if lp is not None:

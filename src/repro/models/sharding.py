@@ -78,13 +78,20 @@ def spec_for(*logical: str | None) -> P:
     return P(*(rules.get(ax) if ax else None for ax in logical))
 
 
+# (logical axis, array shape) pairs already warned about — involuntary
+# replication is logged once per site, not once per traced call
+_REPLICATION_WARNED: set[tuple] = set()
+
+
 def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
     """with_sharding_constraint by logical axes; no-op outside a rules context.
 
-    Axes whose dim doesn't divide the mapped mesh extent are silently dropped
+    Axes whose dim doesn't divide the mapped mesh extent are dropped
     (replicated) — e.g. 8 kv-heads on a 16-way tensor axis.  Uneven GSPMD
     shardings technically work but trigger involuntary full rematerialisation
-    through reshapes, which is how 40GB/device attention temps happen.
+    through reshapes, which is how 40GB/device attention temps happen.  Each
+    drop is logged once per (logical axis, shape) so involuntary replication
+    is visible in logs instead of silently costing memory.
     """
     mesh = _MESH.get()
     if mesh is None:
@@ -99,6 +106,17 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
         tup = (axes,) if isinstance(axes, str) else tuple(axes)
         extent = math.prod(mesh.shape[a] for a in tup)
         if x.shape[i] % extent:
+            key = (logical[i], tuple(x.shape))
+            if key not in _REPLICATION_WARNED:
+                _REPLICATION_WARNED.add(key)
+                import logging
+
+                logging.getLogger(__name__).warning(
+                    "sharding: logical axis %r of a %s array does not divide "
+                    "the %s mesh extent %d — replicating that dim "
+                    "(involuntary; costs memory on every device)",
+                    logical[i], tuple(x.shape), tup, extent,
+                )
             spec[i] = None
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
 
@@ -117,16 +135,38 @@ def extent(logical: str) -> int:
 
 
 def dp_size() -> int:
-    """Data-parallel extent of the active mesh (1 outside a rules context)."""
+    """Data-parallel extent of the active mesh (1 outside a rules context).
+
+    This is a documented re-export: the canonical extent computation lives
+    in ``launch.mesh.dp_size`` (a pure function of a mesh); this wrapper
+    only resolves the active rules table's ``act_batch`` mapping — which
+    under ``DEFAULT_RULES`` is exactly ``launch.mesh.dp_axes`` — and
+    delegates.  A test pins the two agree on the production meshes."""
     mesh = _MESH.get()
     rules = _RULES.get()
     if mesh is None or rules is None:
         return 1
     axes = rules.get("act_batch") or ()
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
-    import math
+    if not axes:
+        return 1
+    from repro.launch.mesh import dp_size as _canonical_dp_size
 
-    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+    return _canonical_dp_size(mesh, axes)
+
+
+def tensor_axis() -> str | None:
+    """The single mesh axis the ``tensor`` rule maps to, or None when no
+    rules context is active or the rule maps to zero/multiple axes — the
+    gate for the mesh-native flex kernel path, whose collectives run over
+    exactly one named axis."""
+    mesh = _MESH.get()
+    rules = _RULES.get()
+    if mesh is None or rules is None:
+        return None
+    axes = rules.get("tensor") or ()
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return axes[0] if len(axes) == 1 else None
 
 
 # ---------------------------------------------------------------------------

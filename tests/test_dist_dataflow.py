@@ -1,0 +1,201 @@
+"""Tests for core.dist_dataflow — the mesh-level CMU.
+
+Property tests pin the WS/IS/OS ICI comm-byte formulas (the wire bytes of
+the schedules ``kernels.mesh_ops`` emits) and the crossover regimes
+``plan_mesh``'s module docstring claims: decode -> WS, train -> IS,
+square-huge-both -> OS.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _propcheck import given, settings, st  # noqa: E402
+
+from repro.core.dataflow import ALL_DATAFLOWS, Dataflow, GemmShape  # noqa: E402
+from repro.core.dist_dataflow import (  # noqa: E402
+    MESH_GATHER_BUDGET_BYTES,
+    MeshSpec,
+    best_mesh_dataflow,
+    mesh_gemm_cost,
+    plan_mesh,
+)
+
+TPS = [2, 4, 8, 16]
+
+
+# ---------------------------------------------------------------------------
+# comm-byte formulas
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=24, deadline=None)
+@given(
+    st.integers(min_value=8, max_value=65536),
+    st.integers(min_value=64, max_value=16384),
+    st.integers(min_value=64, max_value=16384),
+    st.sampled_from(TPS),
+)
+def test_comm_byte_formulas(M, K, N, tp):
+    g = GemmShape(M, K, N)
+    b = 2
+    ring = (tp - 1) / tp
+    ws = mesh_gemm_cost(g, Dataflow.WS, tp)
+    is_ = mesh_gemm_cost(g, Dataflow.IS, tp)
+    os_ = mesh_gemm_cost(g, Dataflow.OS, tp)
+    # WS: all-gather(A) at input dtype + reduce-scatter of f32 partials
+    # (4 B on the wire — what mesh_ops actually psum-scatters), both exposed
+    assert ws.comm_bytes == int((M * K * b + M * N * 4) * ring)
+    assert ws.gather_bytes == M * K * b and not ws.pipelined
+    # IS: all-gather(B), prefetchable; materialises the full weight
+    assert is_.comm_bytes == int(K * N * b * ring)
+    assert is_.gather_bytes == K * N * b and is_.pipelined
+    # OS: rotate(B) — same wire bytes as the IS gather, 1/tp residency,
+    # one local launch per ring hop
+    assert os_.comm_bytes == is_.comm_bytes
+    assert os_.gather_bytes == 2 * K * N * b // tp
+    assert os_.pipelined and os_.ring_steps == tp
+    # FLOPs split evenly in every schedule
+    assert ws.flops_per_chip == is_.flops_per_chip == g.flops // tp
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=64, max_value=4096),
+    st.integers(min_value=64, max_value=4096),
+    st.integers(min_value=64, max_value=4096),
+    st.sampled_from(TPS),
+)
+def test_time_model_structure(M, K, N, tp):
+    g = GemmShape(M, K, N)
+    ws = mesh_gemm_cost(g, Dataflow.WS, tp)
+    # WS comm is exposed: overlap=0 adds, overlap=1 hides down to max()
+    t_c = ws.flops_per_chip / 197e12
+    t_m = ws.comm_bytes / 50e9
+    assert abs(ws.time_s(overlap=0.0) - (t_c + t_m)) < 1e-12
+    assert abs(ws.time_s(overlap=1.0) - max(t_c, t_m)) < 1e-12
+    # pipelined schedules overlap: IS runs at max(compute, gather); the OS
+    # ring's comm floor is the full ring period, comm * tp/(tp-1)
+    is_ = mesh_gemm_cost(g, Dataflow.IS, tp)
+    t_is = is_.comm_bytes / 50e9
+    assert abs(is_.time_s() - max(is_.flops_per_chip / 197e12, t_is)) < 1e-12
+    os_ = mesh_gemm_cost(g, Dataflow.OS, tp)
+    t_os = os_.comm_bytes / 50e9 * tp / (tp - 1)
+    assert abs(os_.time_s() - max(os_.flops_per_chip / 197e12, t_os)) < 1e-12
+    # so OS is never faster than the IS gather it replaces — only cheaper
+    # in per-chip residency
+    assert os_.time_s() >= is_.time_s() - 1e-15
+
+
+# ---------------------------------------------------------------------------
+# crossover regimes (the plan_mesh docstring's claims)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    st.integers(min_value=8, max_value=256),
+    st.integers(min_value=1024, max_value=4096),
+    st.integers(min_value=1024, max_value=4096),
+    st.sampled_from(TPS),
+)
+def test_decode_shapes_prefer_ws(M, K, N, tp):
+    """Decode: M ~ batch << K, N — moving the tiny activations wins."""
+    df, cost = best_mesh_dataflow(GemmShape(M, K, N), tp)
+    assert df is Dataflow.WS, (M, K, N, tp, df)
+    assert cost.comm_bytes < mesh_gemm_cost(GemmShape(M, K, N), Dataflow.IS, tp).comm_bytes
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    st.integers(min_value=16384, max_value=131072),
+    st.integers(min_value=1024, max_value=4096),
+    st.integers(min_value=1024, max_value=4096),
+    st.sampled_from(TPS),
+)
+def test_train_shapes_prefer_is(M, K, N, tp):
+    """Training: M = tokens >> K*N/(K+N) and the weight fits the gather
+    budget — gather the small static weights, keep the fused local kernel."""
+    assert K * N * 2 <= MESH_GATHER_BUDGET_BYTES  # the regime's premise
+    df, _ = best_mesh_dataflow(GemmShape(M, K, N), tp)
+    assert df is Dataflow.IS, (M, K, N, tp, df)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=12288, max_value=32768),
+    st.sampled_from(TPS),
+)
+def test_square_huge_shapes_prefer_os(S, tp):
+    """Square-ish with both operands huge: gathering either full operand
+    busts the per-chip budget — only the OS ring stays feasible."""
+    g = GemmShape(S, S, S)
+    assert S * S * 2 > MESH_GATHER_BUDGET_BYTES  # IS and WS both infeasible
+    df, cost = best_mesh_dataflow(g, tp)
+    assert df is Dataflow.OS, (S, tp, df)
+    # OS residency is 1/tp of the gathered-weight footprint (double-buffered)
+    assert cost.gather_bytes == 2 * S * S * 2 // tp
+
+
+def test_os_is_always_feasible():
+    """OS is the escape hatch: even a zero gather budget returns a plan."""
+    df, _ = best_mesh_dataflow(GemmShape(4096, 4096, 4096), 8, gather_budget=0)
+    assert df is Dataflow.OS
+
+
+def test_plan_mesh_is_per_layer_argmin():
+    gemms = [
+        GemmShape(64, 2048, 2048, name="decode.proj"),
+        GemmShape(65536, 2048, 2048, name="train.proj"),
+        GemmShape(16384, 16384, 16384, name="square.proj"),
+    ]
+    plan = plan_mesh(gemms, tp=8)
+    assert plan["decode.proj"] is Dataflow.WS
+    assert plan["train.proj"] is Dataflow.IS
+    assert plan["square.proj"] is Dataflow.OS
+    for g in gemms:
+        assert plan[g.name] is best_mesh_dataflow(g, 8)[0]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=64, max_value=8192),
+    st.integers(min_value=64, max_value=8192),
+    st.integers(min_value=64, max_value=8192),
+    st.sampled_from(TPS),
+)
+def test_best_never_slower_than_feasible_alternatives(M, K, N, tp):
+    g = GemmShape(M, K, N)
+    df, _ = best_mesh_dataflow(g, tp)
+    best_t = mesh_gemm_cost(g, df, tp).time_s()
+    for other in ALL_DATAFLOWS:
+        c = mesh_gemm_cost(g, other, tp)
+        if c.gather_bytes <= MESH_GATHER_BUDGET_BYTES:
+            assert best_t <= c.time_s() + 1e-15
+
+
+# ---------------------------------------------------------------------------
+# MeshSpec fingerprint
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_mesh_spec_roundtrip_and_extents():
+    spec = MeshSpec(axes=(("data", 2), ("model", 4)), dp_axes=("data",))
+    assert spec.tp == 4 and spec.dp == 2
+    assert MeshSpec.from_row(spec.to_row()) == spec
+    assert MeshSpec.from_row(None) is None
+
+
+def test_mesh_spec_from_mesh():
+    spec = MeshSpec.from_mesh(_FakeMesh({"pod": 2, "data": 16, "model": 16}))
+    assert spec.axes == (("pod", 2), ("data", 16), ("model", 16))
+    assert spec.tp == 16 and spec.dp == 32
+    assert spec.dp_axes == ("pod", "data")  # filtered to present axes
+    spec2 = MeshSpec.from_mesh(_FakeMesh({"data": 4, "model": 2}))
+    assert spec2.dp_axes == ("data",) and spec2.dp == 4 and spec2.tp == 2
