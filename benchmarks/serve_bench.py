@@ -1,0 +1,275 @@
+"""Serving benchmark: continuous batching vs the fixed-batch baseline.
+
+Replays a synthetic Poisson trace (mixed prompt/generation lengths) through
+the ``launch.scheduler`` continuous-batching runtime and through the legacy
+fixed-batch loop, and reports tokens/s, p50/p99 per-token latency, slot
+utilization, and the decode bucket histogram.  Both paths get one untimed
+warm-up replay first so compile time never pollutes the comparison.
+
+The default ``--profile bench`` model (d=512, 4 layers) is deliberately
+compute-bound: that is the regime continuous batching targets.  At toy
+``--profile smoke`` scale a decode step costs microseconds and Python
+dispatch dominates, which rewards the fixed batch's fewer-but-fatter steps
+— a scheduling artifact, not a serving result.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py
+  PYTHONPATH=src python benchmarks/serve_bench.py --json benchmarks/BENCH_serve.json
+  PYTHONPATH=src python benchmarks/serve_bench.py --dry-run   # CI smoke
+
+``--dry-run`` is the CI serving lane's functional smoke: tiny workload,
+no timing gates — it asserts the scheduler invariants (every admitted
+request finishes with exactly ``max_new`` tokens, the block allocator is
+fully restored, streams are bitwise identical to per-request sequential
+decode) and that decode steps actually dispatch through the tuned
+batch-bucket CMU sub-plans (a recorder on ``LayerPlan.decode_plan``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+
+
+def build_model(profile: str):
+    """The benchmark model.  ``bench`` scales the smoke config up to a
+    compute-bound size; ``smoke`` is the tiny CI config."""
+    from repro.models import Model, get_config
+
+    cfg = get_config("qwen3_4b", smoke=True)
+    if profile == "bench":
+        cfg = cfg.replace(d_model=512, d_ff=2048, num_heads=8,
+                          num_kv_heads=4, head_dim=64, num_layers=4)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def latency_percentiles(events: list[tuple[int, int, float]]) -> dict:
+    """Per-token latency percentiles from the scheduler's sync-event stream.
+
+    Events are ``(decode steps so far, tokens so far, perf_counter)`` at
+    every admission/eviction sync.  For consecutive events with a token
+    delta, the segment walltime is attributed evenly across its tokens —
+    the finest-grained latency the no-per-step-sync discipline can observe
+    without reintroducing the per-step host sync it exists to avoid.
+    """
+    per_token: list[float] = []
+    for (s0, k0, t0), (s1, k1, t1) in zip(events, events[1:]):
+        dk = k1 - k0
+        if dk > 0:
+            per_token.extend([(t1 - t0) / dk] * dk)
+    if not per_token:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    arr = np.asarray(per_token)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "mean": float(arr.mean())}
+
+
+def run_continuous(model, params, trace, args):
+    from repro.launch.scheduler import ServeScheduler
+
+    def once():
+        sched = ServeScheduler(
+            model, params, capacity=args.slots, block_size=args.block_size,
+            max_total_len=args.max_prompt + args.max_gen)
+        t0 = time.perf_counter()
+        results, stats = sched.run(trace)
+        return results, stats, time.perf_counter() - t0, sched
+
+    once()  # warm-up: compile every (prompt-bucket, batch-bucket) signature
+    results, stats, wall, sched = once()
+    check_invariants(trace, results, stats, sched)
+    return results, {
+        "walltime_s": wall,
+        "tokens": stats.tokens,
+        "tokens_per_s": stats.tokens / max(wall, 1e-9),
+        "decode_steps": stats.steps,
+        "prefills": stats.prefills,
+        "slot_utilization": stats.slot_utilization,
+        "bucket_histogram": {str(k): v for k, v in stats.bucket_histogram().items()},
+        "latency_per_token_s": latency_percentiles(stats.events),
+    }
+
+
+def run_fixed(model, params, trace):
+    from repro.launch.scheduler import run_fixed_batch
+
+    run_fixed_batch(model, params, trace)  # warm-up
+    results, st = run_fixed_batch(model, params, trace)
+    return results, {
+        "walltime_s": st["walltime_s"],
+        "tokens": st["useful_tokens"],
+        "tokens_per_s": st["useful_tokens"] / max(st["walltime_s"], 1e-9),
+        "decode_steps": st["decode_steps"],
+        "row_steps": st["row_steps"],
+    }
+
+
+def check_invariants(trace, results, stats, sched) -> None:
+    """The scheduler contract, asserted on every benchmark replay."""
+    assert set(results) == {r.rid for r in trace}, "not every request finished"
+    for r in trace:
+        out = results[r.rid]
+        assert out.tokens is not None and len(out.tokens) == r.max_new, \
+            f"req{r.rid}: {0 if out.tokens is None else len(out.tokens)} " \
+            f"tokens, wanted {r.max_new}"
+        assert out.admitted_step <= out.finished_step
+    assert stats.prefills == len(trace)
+    alloc = sched.kv.allocator
+    assert alloc.live_blocks == 0, f"{alloc.live_blocks} KV blocks leaked"
+    assert alloc.free_blocks == sched.kv.num_blocks - 1  # all but scratch
+    assert set(stats.bucket_histogram()) <= set(sched.buckets)
+
+
+def dry_run(args) -> None:
+    """CI smoke: invariants + bucket-plan dispatch, zero timing gates."""
+    from repro.core import (
+        activate_plan,
+        autotune_plan,
+        model_epilogues,
+        model_gemms,
+    )
+    from repro.core.cmu import LayerPlan
+    from repro.launch.scheduler import ServeScheduler, poisson_trace, serve_buckets
+    from repro.launch.serve import sequential_reference
+    from repro.models import Model, get_config
+
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots = 8
+    buckets = serve_buckets(slots)
+    plan = autotune_plan(model_gemms(cfg, tokens=64), measure=False,
+                         decode_buckets=buckets,
+                         epilogue=model_epilogues(cfg))
+    assert plan.has_decode(buckets)
+    activate_plan(plan)
+
+    trace = poisson_trace(8, vocab=cfg.vocab_size, max_prompt=12, max_gen=6,
+                          rate=0.5, seed=args.seed)
+    sched = ServeScheduler(model, params, capacity=slots,
+                           block_size=args.block_size, max_total_len=12 + 6)
+
+    # record every decode-bucket plan lookup the pallas dispatch makes while
+    # the run traces its jit signatures
+    lookups: list[tuple[str, int]] = []
+    orig = LayerPlan.decode_plan
+
+    def recording(self, m):
+        sub = orig(self, m)
+        if sub is not None:
+            lookups.append((self.name, m))
+        return sub
+
+    LayerPlan.decode_plan = recording
+    try:
+        results, stats = sched.run(trace)
+    finally:
+        LayerPlan.decode_plan = orig
+
+    check_invariants(trace, results, stats, sched)
+    hit = sorted({m for _, m in lookups})
+    assert lookups, "decode steps never consulted the bucket sub-plans"
+    assert set(hit) <= set(buckets), (hit, buckets)
+    print(f"bucket-plan dispatch: {len(lookups)} lookups across layers, "
+          f"batch buckets hit {hit} (tuned {list(buckets)})")
+
+    ref = sequential_reference(model, params, trace,
+                               sched.max_blocks * sched.block_size)
+    for r in trace:
+        assert np.array_equal(results[r.rid].tokens, ref[r.rid]), \
+            f"req{r.rid} diverges from sequential decode"
+    print(f"invariants OK: {len(trace)} requests finished, allocator "
+          f"restored, streams identical to per-request sequential decode")
+    print("dry-run OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=("bench", "smoke"), default="bench")
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--max-prompt", type=int, default=16)
+    ap.add_argument("--min-gen", type=int, default=4)
+    ap.add_argument("--max-gen", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="Poisson arrivals per decode step")
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the full benchmark record as JSON")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny workload, invariants + bucket-plan dispatch "
+                         "asserted, no timing (CI smoke)")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        dry_run(args)
+        return
+
+    from repro.launch.scheduler import poisson_trace, serve_buckets
+
+    cfg, model, params = build_model(args.profile)
+    trace = poisson_trace(
+        args.requests, vocab=cfg.vocab_size, max_prompt=args.max_prompt,
+        max_gen=args.max_gen, rate=args.rate, seed=args.seed,
+        min_prompt=args.min_prompt, min_gen=args.min_gen)
+    total = sum(r.max_new for r in trace)
+    gens = sorted(r.max_new for r in trace)
+    print(f"trace: {args.requests} requests, {total} tokens, gen lengths "
+          f"{gens[0]}..{gens[-1]} (median {gens[len(gens) // 2]}), "
+          f"arrival rate {args.rate}/step")
+
+    _, cont = run_continuous(model, params, trace, args)
+    lat = cont["latency_per_token_s"]
+    print(f"continuous: {cont['tokens']} tok in {cont['walltime_s']*1e3:.0f} ms "
+          f"= {cont['tokens_per_s']:,.0f} tok/s | {cont['decode_steps']} steps, "
+          f"util {cont['slot_utilization']:.2f}, "
+          f"buckets {cont['bucket_histogram']}")
+    print(f"  per-token latency p50 {lat['p50']*1e3:.2f} ms, "
+          f"p99 {lat['p99']*1e3:.2f} ms")
+
+    _, fixed = run_fixed(model, params, trace)
+    print(f"fixed batch: {fixed['tokens']} tok in {fixed['walltime_s']*1e3:.0f} ms "
+          f"= {fixed['tokens_per_s']:,.0f} tok/s | {fixed['row_steps']} "
+          f"row-steps for {fixed['tokens']} useful")
+
+    speedup = cont["tokens_per_s"] / max(fixed["tokens_per_s"], 1e-9)
+    print(f"continuous / fixed tokens/s: {speedup:.2f}x")
+
+    if args.json:
+        record = {
+            "config": {
+                "profile": args.profile,
+                "requests": args.requests,
+                "slots": args.slots,
+                "block_size": args.block_size,
+                "prompt_len": [args.min_prompt, args.max_prompt],
+                "gen_len": [args.min_gen, args.max_gen],
+                "arrival_rate": args.rate,
+                "seed": args.seed,
+                "model": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                          "num_layers": cfg.num_layers,
+                          "num_heads": cfg.num_heads,
+                          "num_kv_heads": cfg.num_kv_heads,
+                          "head_dim": cfg.head_dim,
+                          "vocab_size": cfg.vocab_size},
+            },
+            "continuous": cont,
+            "fixed_batch": fixed,
+            "speedup_tokens_per_s": speedup,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Benchmark-record lane: validate every checked-in ``benchmarks/BENCH_*.json``
+against its schema, hand-rolled (no jsonschema dependency).
+
+Each benchmark driver owns a record shape; this script pins it so a schema
+drift (a renamed key, a dropped section, a speedup that silently went below
+1x) fails CI instead of rotting in the repo.  A ``BENCH_*.json`` file with
+no registered schema is an error: new benchmarks must register here.
+
+  PYTHONPATH=src python scripts/check_bench.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class Schema:
+    """Tiny structural validator: dicts map key -> sub-schema, types check
+    with isinstance, tuples mean any-of, callables are predicates."""
+
+    def __init__(self, spec):
+        self.spec = spec
+
+    def errors(self, value, path="$"):
+        return list(_check(self.spec, value, path))
+
+
+def _check(spec, value, path):
+    if isinstance(spec, dict):
+        if not isinstance(value, dict):
+            yield f"{path}: expected object, got {type(value).__name__}"
+            return
+        for key, sub in spec.items():
+            if key not in value:
+                yield f"{path}: missing key '{key}'"
+            else:
+                yield from _check(sub, value[key], f"{path}.{key}")
+    elif isinstance(spec, tuple):
+        for sub in spec:
+            if not list(_check(sub, value, path)):
+                return
+        yield f"{path}: {value!r} matches none of {spec}"
+    elif isinstance(spec, type):
+        ok = isinstance(value, spec)
+        if spec is float:  # ints are acceptable where floats are expected
+            ok = isinstance(value, (int, float)) and not isinstance(value, bool)
+        if spec is int:
+            ok = isinstance(value, int) and not isinstance(value, bool)
+        if not ok:
+            yield f"{path}: expected {spec.__name__}, got {type(value).__name__}"
+    elif spec is None:
+        if value is not None:
+            yield f"{path}: expected null"
+    elif callable(spec):
+        try:
+            ok, why = spec(value)
+        except Exception as e:  # a predicate crash is a schema failure
+            ok, why = False, f"predicate raised {e!r}"
+        if not ok:
+            yield f"{path}: {why}"
+    else:
+        raise TypeError(f"bad schema node at {path}: {spec!r}")
+
+
+def positive(v):
+    return (isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0,
+            f"expected a positive number, got {v!r}")
+
+
+def fraction(v):
+    return (isinstance(v, (int, float)) and 0 <= v <= 1,
+            f"expected a value in [0, 1], got {v!r}")
+
+
+def nonempty_list(v):
+    return (isinstance(v, list) and len(v) > 0, "expected a non-empty list")
+
+
+_SUBPLAN = {"dataflow": str, "block": (list, None), "strip": int}
+
+TRAIN_STEP_SCHEMA = Schema({
+    "config": {"tokens": int, "d_model": int, "d_ff": int, "iters": int,
+               "interpret": bool},
+    "layers": nonempty_list,
+    "walltime_s": {"pallas": positive, "pallas_streamed": positive,
+                   "pallas_copy_bwd": positive, "xla": positive},
+    "hbm_bytes_est": {"bwd_transpose_free": positive, "bwd_via_copy": positive,
+                      "plan_strips": positive, "forced_streamed": positive},
+    "strip_showcase": nonempty_list,
+    "mesh_composition": (list, None),
+})
+
+_LANE = {"walltime_s": positive, "tokens": positive,
+         "tokens_per_s": positive, "decode_steps": positive}
+
+SERVE_SCHEMA = Schema({
+    "config": {"profile": str, "requests": positive, "slots": positive,
+               "block_size": positive, "prompt_len": list, "gen_len": list,
+               "arrival_rate": float, "seed": int,
+               "model": {"d_model": int, "d_ff": int, "num_layers": int,
+                         "num_heads": int, "num_kv_heads": int,
+                         "head_dim": int, "vocab_size": int}},
+    "continuous": {**_LANE, "prefills": positive,
+                   "slot_utilization": fraction,
+                   "bucket_histogram": dict,
+                   "latency_per_token_s": {"p50": positive, "p99": positive,
+                                           "mean": positive}},
+    "fixed_batch": {**_LANE, "row_steps": positive},
+    "speedup_tokens_per_s": positive,
+})
+
+
+def extra_serve_checks(rec) -> list[str]:
+    """Cross-field relations the flat schema can't express."""
+    errors = []
+    cont, fixed = rec["continuous"], rec["fixed_batch"]
+    if cont["tokens"] != fixed["tokens"]:
+        errors.append(
+            f"continuous decoded {cont['tokens']} tokens but fixed-batch "
+            f"{fixed['tokens']} — not the same workload")
+    if rec["speedup_tokens_per_s"] <= 1.0:
+        errors.append(
+            f"checked-in speedup is {rec['speedup_tokens_per_s']:.3f}x — "
+            "continuous batching must beat the fixed-batch baseline")
+    if fixed["row_steps"] < fixed["tokens"]:
+        errors.append("fixed_batch.row_steps < useful tokens (impossible)")
+    buckets = {int(k) for k in cont["bucket_histogram"]}
+    if any(b > rec["config"]["slots"] for b in buckets):
+        errors.append(
+            f"bucket histogram {sorted(buckets)} exceeds slot capacity "
+            f"{rec['config']['slots']}")
+    return errors
+
+
+VALIDATORS = {
+    "BENCH_train_step.json": (TRAIN_STEP_SCHEMA, lambda rec: []),
+    "BENCH_serve.json": (SERVE_SCHEMA, extra_serve_checks),
+}
+
+
+def main() -> int:
+    errors: list[str] = []
+    paths = sorted(glob.glob(os.path.join(ROOT, "benchmarks", "BENCH_*.json")))
+    if not paths:
+        print("BENCH CHECK FAILED: no benchmarks/BENCH_*.json records found")
+        return 1
+    for path in paths:
+        name = os.path.basename(path)
+        if name not in VALIDATORS:
+            errors.append(f"{name}: no schema registered in check_bench.py")
+            continue
+        schema, extra = VALIDATORS[name]
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except json.JSONDecodeError as e:
+            errors.append(f"{name}: invalid JSON — {e}")
+            continue
+        errs = schema.errors(rec)
+        if not errs:
+            errs = [f"{name}: {msg}" for msg in extra(rec)]
+        else:
+            errs = [f"{name}: {msg}" for msg in errs]
+        errors += errs
+        print(f"checked {name}" + (f" — {len(errs)} error(s)" if errs else ""))
+    if errors:
+        print("\n".join(["", "BENCH CHECK FAILED:"] + errors))
+        return 1
+    print(f"bench check OK ({len(paths)} record(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -87,6 +87,21 @@ TRANS_DX = (False, True)
 TRANS_DW = (True, False)
 NO_TRANS = (False, False)
 
+# Serving batch-size buckets the CMU keys decode GEMM plans on — the
+# sublane-aligned skinny-bm candidates (kernel_block_candidates(M,
+# sublane=True)), so a continuous-batching scheduler that quantizes its live
+# batch to these sizes dispatches a plan whose bm never pads past the batch.
+DECODE_BUCKETS = (8, 16, 32, 64)
+
+
+def decode_bucket(m: int, buckets: tuple[int, ...] = DECODE_BUCKETS) -> int | None:
+    """The smallest bucket that fits an ``m``-row decode GEMM, or None when
+    ``m`` exceeds every bucket (prefill-sized batches keep the forward plan)."""
+    for b in sorted(buckets):
+        if m <= b:
+            return b
+    return None
+
 
 @dataclass(frozen=True)
 class GemmPlan:
@@ -198,6 +213,20 @@ class LayerPlan:
     strip: int = 1  # forward accumulator-strip depth (1 = streamed)
     # mesh sub-plan: the distributed composition (None = single-device only)
     mesh: MeshPlan | None = None
+    # decode sub-plans keyed by batch-size bucket (DECODE_BUCKETS): the same
+    # (K, N) projection tuned at M = bucket rows, so the serving decode step
+    # dispatches a skinny-bm geometry instead of the prefill-sized forward
+    # row.  None = plan predates serving (v1–v5) or was tuned without buckets.
+    decode: dict[int, GemmPlan] | None = None
+
+    def decode_plan(self, m: int) -> GemmPlan | None:
+        """The decode sub-plan for an ``m``-row dispatch: the smallest tuned
+        bucket that fits, or None (caller keeps the forward decision) when no
+        buckets were tuned or ``m`` exceeds them all."""
+        if not self.decode:
+            return None
+        b = decode_bucket(m, tuple(self.decode))
+        return self.decode.get(b) if b is not None else None
 
 
 @dataclass
@@ -234,6 +263,15 @@ class DataflowPlan:
             l.bwd_dx is not None and l.bwd_dw is not None for l in self.layers
         )
 
+    def has_decode(self, buckets: tuple[int, ...]) -> bool:
+        """True when every layer carries a decode sub-plan for every
+        requested bucket — the bar a plan must clear before it can drive a
+        bucketed serving run without re-tuning."""
+        return bool(self.layers) and all(
+            l.decode is not None and all(b in l.decode for b in buckets)
+            for l in self.layers
+        )
+
     def to_json(self) -> str:
         return json.dumps(
             [
@@ -250,6 +288,8 @@ class DataflowPlan:
                     "bwd_dx": l.bwd_dx.to_row() if l.bwd_dx else None,
                     "bwd_dw": l.bwd_dw.to_row() if l.bwd_dw else None,
                     "mesh": l.mesh.to_row() if l.mesh else None,
+                    "decode": {str(b): gp.to_row() for b, gp in sorted(l.decode.items())}
+                    if l.decode else None,
                 }
                 for l in self.layers
             ],
@@ -262,6 +302,7 @@ class DataflowPlan:
         for row in json.loads(s):
             gemm = GemmShape(M=row["M"], K=row["K"], N=row["N"], name=row["name"])
             blk = row.get("block")
+            dec = row.get("decode")
             plan.layers.append(
                 LayerPlan(
                     name=row["name"],
@@ -274,6 +315,8 @@ class DataflowPlan:
                     bwd_dx=GemmPlan.from_row(row.get("bwd_dx")),
                     bwd_dw=GemmPlan.from_row(row.get("bwd_dw")),
                     mesh=MeshPlan.from_row(row.get("mesh")),
+                    decode={int(b): GemmPlan.from_row(r) for b, r in dec.items()}
+                    if dec else None,
                 )
             )
         return plan
@@ -591,6 +634,24 @@ def _tune_mesh(
     )
 
 
+def _tune_decode(
+    gemm: GemmShape,
+    buckets: tuple[int, ...],
+    *,
+    epilogue: "bool | EpilogueSig" = False,
+    **tune_kw,
+) -> dict[int, GemmPlan]:
+    """Tune one layer's decode sub-plans: the same (K, N) projection at
+    M = bucket rows for every serving batch-size bucket, timed with the
+    layer's fused-epilogue signature (decode issues the same fused op as
+    prefill, just skinny)."""
+    out = {}
+    for b in sorted(set(buckets)):
+        g = GemmShape(M=b, K=gemm.K, N=gemm.N, name=f"{gemm.name}@b{b}")
+        out[b] = _tune_gemm(g, epilogue=epilogue, **tune_kw)
+    return out
+
+
 def autotune_plan(
     gemms: list[GemmShape],
     *,
@@ -602,6 +663,7 @@ def autotune_plan(
     epilogue: "bool | EpilogueSig | dict[str, EpilogueSig | None]" = False,
     train: bool = False,
     mesh: MeshSpec | None = None,
+    decode_buckets: tuple[int, ...] | None = None,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
@@ -634,6 +696,12 @@ def autotune_plan(
     tuned for the post-collective shapes.  The single-device decisions
     above are still tuned for the global geometry — they remain the
     dispatch for layers the mesh can't divide.
+
+    With ``decode_buckets`` every layer additionally gets per-bucket
+    **decode sub-plans** (``_tune_decode``): the same projection tuned at
+    M = bucket rows for each serving batch-size bucket, so a
+    continuous-batching decode step dispatches a skinny-bm geometry keyed
+    on its quantized live batch instead of the prefill-sized forward row.
     """
     if interpret is None:
         from repro.kernels import ops
@@ -654,10 +722,15 @@ def autotune_plan(
         if mesh is not None:
             mp = _tune_mesh(gemm, mesh, train=train, epilogue=sig or False,
                             **kw)
+        dec = None
+        if decode_buckets:
+            dec = _tune_decode(gemm, tuple(decode_buckets),
+                               epilogue=sig or False, **kw)
         plan.layers.append(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
-                      bwd_dx=dx, bwd_dw=dw, strip=fwd.strip, mesh=mp)
+                      bwd_dx=dx, bwd_dw=dw, strip=fwd.strip, mesh=mp,
+                      decode=dec)
         )
     return plan
 
@@ -729,6 +802,45 @@ def add_bwd_subplans(
             l, bwd_dx=_tune_gemm(g_dx, trans=TRANS_DX, **kw),
             bwd_dw=_tune_gemm(g_dw, trans=TRANS_DW, **kw)
         ))
+    return out
+
+
+def add_decode_subplans(
+    plan: DataflowPlan,
+    buckets: tuple[int, ...],
+    *,
+    epilogue: "bool | EpilogueSig | dict[str, EpilogueSig | None]" = False,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    top_k: int = 3,
+    measure: bool = True,
+    iters: int = 2,
+    interpret: bool | None = None,
+    **_ignored,
+) -> DataflowPlan:
+    """Upgrade a plan for bucketed serving **incrementally**: every existing
+    decision — forward rows, backward and mesh sub-plans, and decode buckets
+    already tuned — is kept verbatim (a migrated v1–v5 cache keeps
+    dispatching bit-for-bit everywhere else), and only the missing decode
+    buckets are tuned."""
+    import dataclasses
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
+              iters=iters, interpret=interpret)
+    out = DataflowPlan(mesh=plan.mesh)
+    want = tuple(sorted(set(buckets)))
+    for l in plan.layers:
+        have = dict(l.decode or {})
+        missing = tuple(b for b in want if b not in have)
+        if not missing:
+            out.layers.append(l)
+            continue
+        sig = epilogue.get(l.name) if isinstance(epilogue, dict) else epilogue
+        have.update(_tune_decode(l.gemm, missing, epilogue=sig or False, **kw))
+        out.layers.append(dataclasses.replace(l, decode=have))
     return out
 
 

@@ -33,12 +33,19 @@ Schema versions (see docs/autotune.md for the full JSON shape):
     post-collective shapes.  A cached plan only matches when its mesh
     fingerprint equals the requested one — a plan tuned for a 2x4 mesh is
     never silently applied to an 8x1.
+  * v6 — each layer may carry ``decode``: per-batch-size-bucket decode
+    sub-plans (bucket -> {dataflow, block, est_cost, source, trans, strip}),
+    the same projection tuned at M = bucket rows so the serving decode step
+    dispatches a skinny-bm geometry keyed on its quantized live batch (see
+    docs/serving.md).  Null / absent = no buckets tuned; the forward row
+    remains the dispatch for every M, exactly the v5 behaviour.
 
-Older files still **load and migrate**: v1–v4 files load as single-device
-plans (``mesh`` comes back None everywhere), so their dispatch is
-bit-for-bit what it was — the mesh axis only enters via an incremental
-upgrade (``add_mesh_subplans``, which keeps every single-device decision
-verbatim) or a re-tune.  v1 rows are a strict subset (the
+Older files still **load and migrate**: v1–v5 files load with ``decode``
+None everywhere (and v1–v4 with ``mesh`` None), so their dispatch is
+bit-for-bit what it was — the decode-bucket and mesh axes only enter via
+incremental upgrades (``add_decode_subplans`` / ``add_mesh_subplans``,
+which keep every existing decision verbatim) or a re-tune.  v1 rows are
+a strict subset (the
 backward sub-plans come back as None); v2 backward sub-plans — tuned on
 pre-transposed operands, so their (dataflow, block) remains valid for the
 same logical GEMM — are migrated to the zero-copy layout of their role
@@ -69,14 +76,15 @@ from .cmu import (
     TRANS_DW,
     DataflowPlan,
     add_bwd_subplans,
+    add_decode_subplans,
     add_mesh_subplans,
     autotune_plan,
 )
 from .dist_dataflow import MeshSpec
 
-PLAN_CACHE_VERSION = 5
+PLAN_CACHE_VERSION = 6
 # older schemas this build can still read and migrate
-COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5)
+COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -120,10 +128,10 @@ def load_plan(path: str) -> DataflowPlan:
         if migrated:
             note = (f"{migrated} decisions migrated (zero-copy layouts / "
                     "strip=1 streamed semantics); single-device dispatch "
-                    "unchanged, mesh sub-plans absent")
+                    "unchanged, mesh/decode sub-plans absent")
         elif version >= 2:
-            note = ("rows are a structural subset — single-device dispatch "
-                    "unchanged, mesh sub-plans absent")
+            note = ("rows are a structural subset — dispatch unchanged, "
+                    "missing sub-plans (mesh/decode buckets) absent")
         else:
             note = "backward sub-plans absent — training will re-tune"
         logging.getLogger(__name__).info(
@@ -136,9 +144,10 @@ def load_plan(path: str) -> DataflowPlan:
 
 
 def _migrate_rows(layers: list[dict], version: int) -> int:
-    """In-place v1/v2/v3 -> v5 row migration; returns migrated field count.
-    v4 rows need no edits: v5 only *adds* the optional mesh fields, which
-    absent keys already decode as None (single-device).
+    """In-place v1/v2/v3 -> v6 row migration; returns migrated field count.
+    v4/v5 rows need no edits: v5 and v6 only *add* optional fields (the
+    ``mesh`` sub-plan and the per-bucket ``decode`` sub-plans), which
+    absent keys already decode as None (single-device, unbucketed).
 
     v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
     the copy-based path minus the copy — their (dataflow, block) stays valid
@@ -174,7 +183,8 @@ def _migrate_rows(layers: list[dict], version: int) -> int:
 
 
 def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
-                 mesh: MeshSpec | None = None) -> bool:
+                 mesh: MeshSpec | None = None,
+                 buckets: tuple[int, ...] | None = None) -> bool:
     """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
     the guard against silently applying a cache tuned for another arch or
     batch geometry.  With ``require_bwd`` the plan must also carry backward
@@ -182,18 +192,24 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
     mesh fingerprint must equal the requested one (a plan tuned for another
     mesh topology is stale at the mesh level); a mesh-tuned plan still
     matches a single-device request — its single-device rows are intact and
-    the mesh sub-plans are simply never consulted."""
+    the mesh sub-plans are simply never consulted.  With ``buckets`` every
+    layer must carry a decode sub-plan for every requested batch-size bucket
+    (the serving bar); a bucket-tuned plan still matches a bucketless
+    request the same way."""
     planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
     wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
     if planned != wanted:
         return False
     if mesh is not None and plan.mesh != mesh:
         return False
+    if buckets and not plan.has_decode(tuple(buckets)):
+        return False
     return plan.has_bwd() if require_bwd else True
 
 
 def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
-                     mesh: MeshSpec | None = None, **autotune_kw):
+                     mesh: MeshSpec | None = None,
+                     buckets: tuple[int, ...] | None = None, **autotune_kw):
     """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
     matches ``gemms``, otherwise a fresh autotune persisted to ``path``
     (when given).  A cache tuned for different GEMM shapes (other arch,
@@ -205,10 +221,14 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     single-device decisions match but whose mesh fingerprint differs from
     ``mesh`` (a migrated v1–v4 file, or a cache tuned for another topology)
     is upgraded incrementally: only the mesh sub-plans are tuned, every
-    single-device decision is kept verbatim."""
+    single-device decision is kept verbatim.  The same applies to
+    ``buckets``: a cache missing decode sub-plans for some requested
+    batch-size bucket (a migrated v1–v5 file, or one tuned for fewer
+    buckets) gains only the missing buckets (``add_decode_subplans``)."""
     if path and os.path.exists(path):
         plan = load_plan(path)
-        if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh):
+        if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh,
+                        buckets=buckets):
             if autotune_kw.get("epilogue"):
                 import logging
 
@@ -242,12 +262,21 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                 )
                 plan = add_mesh_subplans(plan, mesh, train=require_bwd,
                                          **autotune_kw)
+            if buckets and not plan.has_decode(tuple(buckets)):
+                log.warning(
+                    "plan cache %s lacks decode sub-plans for buckets %s; "
+                    "tuning the missing buckets only (keeping every "
+                    "existing decision)", path, tuple(buckets),
+                )
+                plan = add_decode_subplans(plan, tuple(buckets),
+                                           **autotune_kw)
             save_plan(path, plan)
             return plan, False
         log.warning(
             "plan cache %s was tuned for different GEMM shapes; re-tuning", path
         )
-    plan = autotune_plan(gemms, train=require_bwd, mesh=mesh, **autotune_kw)
+    plan = autotune_plan(gemms, train=require_bwd, mesh=mesh,
+                         decode_buckets=buckets, **autotune_kw)
     if path:
         save_plan(path, plan)
     return plan, False

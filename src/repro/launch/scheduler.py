@@ -1,0 +1,404 @@
+"""Continuous-batching serve scheduler over the paged KV cache.
+
+The previous serving loop was fixed-batch: all requests prefill together,
+decode runs ``max(gen)`` steps for everyone, and a request finishing early
+keeps burning its row until the slowest one is done.  This module replaces
+it with the production shape:
+
+  * a **request queue** with per-step admission — finished requests are
+    evicted the step they complete and freed slots are refilled from the
+    queue, so the decode batch tracks the live load;
+  * a **slot table** of fixed capacity: slot state (block table, position,
+    last token) lives in compacted host arrays sliced to the active bucket
+    each step, so jit only ever sees one shape per bucket;
+  * **bucket-quantized decode**: the live batch is padded up to the
+    smallest tuned batch-size bucket (``core.cmu.DECODE_BUCKETS`` capped at
+    the slot capacity) and each bucket dispatches its own pre-tuned CMU
+    decode sub-plan — the PR-4 skinny-bm geometries — via
+    ``LayerPlan.decode_plan``;
+  * **prefill/decode disaggregation**: prefill runs one request at a time
+    at a pow2-of-block-size padded prompt length (one jit signature per
+    length bucket), scattering K/V straight into the paged block pools;
+    decode never sees a prompt.  Cross-request prefill batching is left
+    out deliberately: rows of a batched GEMM under a *different* bucket
+    plan are a different reduction geometry, which would break the
+    batch-composition-independence guarantee the tests pin down.
+
+Determinism contract: greedy decode here is bitwise identical to classic
+per-request ``prefill``/``decode_step`` serving, independent of arrival
+order, co-scheduled batch composition, and bucket padding — pad slots
+write only the reserved scratch block and masked attention scores underflow
+to exact zeros, so a request's stream never depends on its neighbours.
+
+Host/device sync discipline: tokens live in a device-resident slot array
+and are folded back with lazy ``.at[].set``; the loop never calls
+``np.asarray`` per step (the old loop's per-step host sync).  The only
+blocking syncs are at admission/eviction events — where the host must
+inspect schedule state anyway — and each one timestamps the event stream
+that ``benchmarks/serve_bench.py`` turns into per-token latencies.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cmu import DECODE_BUCKETS
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.runtime.kv_cache import PagedKVCache
+
+log = logging.getLogger(__name__)
+
+
+@dataclass
+class Request:
+    """One serving request: ``max_new`` greedy tokens from ``prompt``.
+
+    ``arrival`` is a virtual timestamp in decode-step units — the scheduler
+    admits a request only once its arrival step has passed, which is how
+    the benchmark replays a Poisson trace without wall-clock sleeps."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: int = 0
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray | None  # filled by the end-of-run drain
+    admitted_step: int
+    finished_step: int
+
+
+@dataclass
+class ServeStats:
+    capacity: int
+    steps: int = 0
+    prefills: int = 0
+    tokens: int = 0
+    active_per_step: list[int] = field(default_factory=list)
+    bucket_per_step: list[int] = field(default_factory=list)
+    # (decode steps so far, tokens so far, perf_counter) at every sync event
+    events: list[tuple[int, int, float]] = field(default_factory=list)
+
+    @property
+    def slot_utilization(self) -> float:
+        if not self.steps:
+            return 0.0
+        return sum(self.active_per_step) / (self.steps * self.capacity)
+
+    def bucket_histogram(self) -> dict[int, int]:
+        h: dict[int, int] = {}
+        for b in self.bucket_per_step:
+            h[b] = h.get(b, 0) + 1
+        return dict(sorted(h.items()))
+
+
+@dataclass
+class _Slot:
+    rid: int
+    pos: int        # next cache write position = tokens already cached
+    remaining: int  # decode steps left
+    blocks: list[int]
+    admitted_step: int
+
+
+def _pow2_at_least(n: int, lo: int) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _jit_steps(model):
+    """Jitted (greedy prefill, greedy decode) paged steps, cached on the
+    model: every ``ServeScheduler`` for the same model shares one jit cache,
+    so a fresh scheduler (the benchmark builds several) never recompiles
+    already-traced (prompt-bucket, batch-bucket) signatures."""
+    cached = getattr(model, "_paged_jit_steps", None)
+    if cached is not None:
+        return cached
+    pf = make_prefill_step(model, paged=True)
+    dc = make_decode_step(model, paged=True)
+
+    def prefill_fn(params, tokens, lens, table, pool_k, pool_v):
+        last, pk, pv = pf(params, {"tokens": tokens}, lens, table, pool_k, pool_v)
+        return jnp.argmax(last, -1).astype(jnp.int32), pk, pv
+
+    def decode_fn(params, pool_k, pool_v, table, positions, token):
+        logits, pk, pv = dc(params, pool_k, pool_v, table, positions, token)
+        return jnp.argmax(logits, -1).astype(jnp.int32), pk, pv
+
+    steps = (jax.jit(prefill_fn, donate_argnums=(4, 5)),
+             jax.jit(decode_fn, donate_argnums=(1, 2)))
+    model._paged_jit_steps = steps
+    return steps
+
+
+def serve_buckets(capacity: int) -> tuple[int, ...]:
+    """The decode batch buckets for a slot capacity: every tuned bucket
+    below it, plus the capacity itself."""
+    return tuple(sorted({b for b in DECODE_BUCKETS if b < capacity} | {capacity}))
+
+
+def poisson_trace(n: int, *, vocab: int, max_prompt: int, max_gen: int,
+                  rate: float = 0.0, seed: int = 0, min_prompt: int = 4,
+                  min_gen: int = 2) -> list[Request]:
+    """Synthetic request trace: Poisson arrivals (exponential interarrivals
+    in decode-step units; ``rate <= 0`` lands everything at step 0) with
+    uniformly mixed prompt/generation lengths."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        if rate > 0:
+            t += rng.exponential(1.0 / rate)
+        p = int(rng.integers(min_prompt, max_prompt + 1))
+        g = int(rng.integers(min_gen, max_gen + 1))
+        prompt = rng.integers(0, vocab, size=p).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=g, arrival=int(t)))
+    return reqs
+
+
+class ServeScheduler:
+    """Continuous-batching greedy decoder over a paged KV cache.
+
+    ``capacity`` slots; each admitted request gets its blocks for
+    ``prompt + max_new - 1`` cache positions up front (no mid-flight OOM),
+    a queue position otherwise.  ``run(requests)`` replays a trace and
+    returns ``({rid: RequestResult}, ServeStats)``.
+    """
+
+    def __init__(self, model, params, *, capacity: int = 8,
+                 block_size: int = 16, max_total_len: int,
+                 num_blocks: int | None = None):
+        cfg = model.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"continuous batching covers dense/moe/vlm, not {cfg.family}")
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self.block_size = block_size
+        self.buckets = serve_buckets(capacity)
+        # table width: blocks for the longest admissible request
+        self.max_blocks = -(-max_total_len // block_size)
+        if num_blocks is None:
+            num_blocks = capacity * self.max_blocks + 1  # +1 scratch
+        self.kv = PagedKVCache(cfg, num_blocks, block_size)
+
+        self._prefill, self._decode = _jit_steps(model)
+
+    # -- sizing ------------------------------------------------------------
+
+    def total_len(self, r: Request) -> int:
+        """Cache positions a request needs: prompt + all but the last
+        generated token (the last one is sampled but never cached)."""
+        return len(r.prompt) + r.max_new - 1
+
+    def prompt_bucket(self, p: int) -> int:
+        return _pow2_at_least(max(p, self.block_size), self.block_size)
+
+    def bucket(self, active: int) -> int:
+        for b in self.buckets:
+            if active <= b:
+                return b
+        raise AssertionError(f"{active} active > capacity {self.capacity}")
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, requests: list[Request]) -> tuple[dict[int, RequestResult], ServeStats]:
+        for r in requests:
+            need = self.total_len(r)
+            if self.kv.blocks_for(need) > min(self.max_blocks,
+                                              self.kv.num_blocks - 1):
+                raise ValueError(
+                    f"request {r.rid} needs {need} cache positions; pool is "
+                    f"{self.max_blocks} blocks x {self.block_size}")
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        waiting: deque[Request] = deque()
+        slots: list[_Slot] = []
+        C, nb = self.capacity, self.max_blocks
+        tables = np.zeros((C, nb), np.int32)      # pad rows -> scratch block
+        positions = np.zeros((C,), np.int32)
+        tok = jnp.zeros((C,), jnp.int32)          # device-resident slot tokens
+        pool_k, pool_v = self.kv.k, self.kv.v
+        step = 0
+        tokens_out = 0
+        # per decode step: (token array (bucket,), rids of active slots);
+        # prefill first-tokens ride the same list — everything is fetched
+        # from device in ONE transfer after the loop (`drain`), never per step
+        emitted: list[tuple[jax.Array, tuple[int, ...]]] = []
+        results: dict[int, RequestResult] = {}
+        stats = ServeStats(capacity=C)
+
+        def note_event():
+            jax.block_until_ready(tok)
+            stats.events.append((stats.steps, tokens_out, time.perf_counter()))
+
+        def evict_finished():
+            nonlocal tok
+            done = [i for i, s in enumerate(slots) if s.remaining == 0]
+            for i in reversed(done):  # compact from the back: swap-with-last
+                s = slots[i]
+                results[s.rid] = RequestResult(
+                    rid=s.rid, tokens=None, admitted_step=s.admitted_step,
+                    finished_step=step)
+                self.kv.free(s.blocks)
+                last = len(slots) - 1
+                if i != last:
+                    slots[i] = slots[last]
+                    tables[i] = tables[last]
+                    positions[i] = positions[last]
+                    tok = tok.at[i].set(tok[last])
+                slots.pop()
+                tables[len(slots)] = 0
+                positions[len(slots)] = 0
+            return bool(done)
+
+        note_event()
+        while pending or waiting or slots:
+            while pending and pending[0].arrival <= step:
+                waiting.append(pending.popleft())
+            synced = False
+            while waiting and len(slots) < C:
+                r = waiting[0]
+                blocks = self.kv.alloc(self.total_len(r))
+                if blocks is None:
+                    break  # pool exhausted: FIFO-wait for evictions
+                waiting.popleft()
+                tok, pool_k, pool_v, first = self._admit(
+                    r, len(slots), blocks, slots, tables, positions, tok,
+                    pool_k, pool_v, step)
+                emitted.append((first, (r.rid,)))
+                tokens_out += 1
+                stats.prefills += 1
+                synced |= evict_finished()  # max_new == 1: done at prefill
+                synced = True
+            if synced:
+                note_event()
+            if not slots:
+                if pending:
+                    step = max(step, pending[0].arrival)  # idle: skip ahead
+                    continue
+                if waiting:
+                    raise AssertionError(
+                        "empty slot table but queued requests: pool cannot "
+                        "satisfy an admissible request")
+                break
+            b = self.bucket(len(slots))
+            tok_b, pool_k, pool_v = self._decode(
+                self.params, pool_k, pool_v,
+                jnp.asarray(tables[:b]), jnp.asarray(positions[:b]), tok[:b])
+            tok = tok.at[:b].set(tok_b)
+            step += 1
+            stats.steps += 1
+            stats.active_per_step.append(len(slots))
+            stats.bucket_per_step.append(b)
+            emitted.append((tok_b, tuple(s.rid for s in slots)))
+            tokens_out += len(slots)
+            for s in slots:
+                s.pos += 1
+                s.remaining -= 1
+            positions[:len(slots)] += 1
+            if evict_finished():
+                note_event()
+        note_event()
+        self.kv.k, self.kv.v = pool_k, pool_v
+        stats.tokens = tokens_out
+        self._drain(emitted, results)
+        return results, stats
+
+    def _admit(self, r: Request, row: int, blocks: list[int], slots, tables,
+               positions, tok, pool_k, pool_v, step: int):
+        """Prefill one request into ``row``: pad the prompt to its length
+        bucket, scatter K/V through a prefill block table (entries past the
+        allocation -> scratch), and seed the slot with the first sampled
+        token."""
+        p = len(r.prompt)
+        sb = self.prompt_bucket(p)
+        prompt = np.zeros((1, sb), np.int32)
+        prompt[0, :p] = r.prompt
+        nb_p = sb // self.block_size
+        ptable = np.zeros((1, nb_p), np.int32)
+        for j in range(min(nb_p, len(blocks))):
+            ptable[0, j] = blocks[j]
+        first, pool_k, pool_v = self._prefill(
+            self.params, jnp.asarray(prompt),
+            jnp.asarray(np.array([p], np.int32)), jnp.asarray(ptable),
+            pool_k, pool_v)
+        tables[row] = 0
+        tables[row, :len(blocks)] = blocks
+        positions[row] = p
+        tok = tok.at[row].set(first[0])
+        slots.append(_Slot(rid=r.rid, pos=p, remaining=r.max_new - 1,
+                           blocks=blocks, admitted_step=step))
+        return tok, pool_k, pool_v, first
+
+    def _drain(self, emitted, results) -> None:
+        """One device->host transfer for every token of the run, then
+        scatter them back into per-request streams."""
+        host = jax.device_get([t for t, _ in emitted])
+        streams: dict[int, list[int]] = {}
+        for arr, (_, rids) in zip(host, emitted):
+            for i, rid in enumerate(rids):
+                streams.setdefault(rid, []).append(int(arr[i]))
+        for rid, toks in streams.items():
+            results[rid].tokens = np.asarray(toks, np.int32)
+
+
+def run_fixed_batch(model, params, requests: list[Request], *,
+                    cache_len: int | None = None):
+    """The pre-scheduler fixed-batch serving loop, kept as the benchmark
+    baseline: every prompt right-padded to the longest, one joint prefill,
+    then ``max(max_new)`` decode steps for the whole batch — early
+    finishers burn their row until the last request completes.  Tokens stay
+    on device until one final transfer (the old loop's per-step
+    ``np.asarray`` host sync is gone here too).
+
+    Note the classic semantics: with mixed prompt lengths the joint prefill
+    samples every row at the padded last column, so this is a throughput
+    baseline, not a correctness reference — the sequential reference for
+    that is per-request classic decode (see ``launch.serve``).
+    """
+    B = len(requests)
+    pmax = max(len(r.prompt) for r in requests)
+    gmax = max(r.max_new for r in requests)
+    if cache_len is None:
+        cache_len = _pow2_at_least(pmax + gmax, 16)
+    prompt = np.zeros((B, pmax), np.int32)
+    for i, r in enumerate(requests):
+        prompt[i, :len(r.prompt)] = r.prompt
+    # same per-model jit caching as the scheduler path, so repeat baseline
+    # runs (warm-up + measured) don't recompile and the comparison is honest
+    cached = getattr(model, "_classic_jit_steps", None)
+    if cached is None or cached[0] != cache_len:
+        prefill = jax.jit(make_prefill_step(model, cache_len))
+        decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+        model._classic_jit_steps = cached = (cache_len, prefill, decode)
+    _, prefill, decode = cached
+
+    t0 = time.perf_counter()
+    cache, last = prefill(params, {"tokens": jnp.asarray(prompt)})
+    tok = jnp.argmax(last, -1).astype(jnp.int32)
+    outs = [tok]
+    for _ in range(gmax - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    wall = time.perf_counter() - t0
+
+    host = np.stack(jax.device_get(outs), axis=1)  # (B, gmax)
+    results = {r.rid: host[i, :r.max_new] for i, r in enumerate(requests)}
+    useful = sum(r.max_new for r in requests)
+    return results, {"walltime_s": wall, "useful_tokens": useful,
+                     "row_steps": B * gmax, "decode_steps": gmax - 1}

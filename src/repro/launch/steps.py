@@ -96,14 +96,51 @@ def microbatches_for(arch_name: str, step: str = "train") -> int:
     return {"arctic_480b": 8, "qwen3_moe_235b": 4, "gemma3_12b": 2}.get(arch_name, 1)
 
 
-def make_prefill_step(model: Model, cache_len: int) -> Callable:
+def make_prefill_step(model: Model, cache_len: int | None = None, *,
+                      paged: bool = False) -> Callable:
+    """Prefill step builder.
+
+    Classic form (``cache_len``): (params, batch) -> (dense cache, last
+    logits).  With ``paged=True`` the step is the disaggregated-serving
+    prefill instead: (params, batch, lens, table, pool_k, pool_v) ->
+    (per-row last real logits, updated pools) — the prompt is forwarded at
+    its padded bucket length, K/V scattered into the KV block pools through
+    ``table``, and the logits row picked at each request's true last token
+    (``lens - 1``), so prompt-length bucketing never changes the sampled
+    token.
+    """
+    if paged:
+        from repro.runtime.kv_cache import write_prefill_blocks
+
+        def prefill_paged(params, batch, lens, table, pool_k, pool_v):
+            logits, k_all, v_all = model.prefill_kv(params, batch)
+            pool_k, pool_v = write_prefill_blocks(pool_k, pool_v, k_all, v_all, table)
+            B = k_all.shape[1]
+            last = logits[jnp.arange(B), lens - 1]
+            return last, pool_k, pool_v
+
+        return prefill_paged
+
     def prefill(params, batch):
         return model.prefill(params, batch, cache_len)
 
     return prefill
 
 
-def make_decode_step(model: Model) -> Callable:
+def make_decode_step(model: Model, *, paged: bool = False) -> Callable:
+    """Decode step builder.  Classic form: (params, cache, token) ->
+    (logits, cache).  With ``paged=True``: (params, pool_k, pool_v, table,
+    positions, token) -> (logits, pool_k, pool_v) — the continuous-batching
+    step over the paged KV block pools (per-slot block tables + positions,
+    one jit signature per batch bucket)."""
+    if paged:
+        def decode_paged(params, pool_k, pool_v, table, positions, token):
+            logits, pools = model.decode_step_paged(
+                params, {"k": pool_k, "v": pool_v}, table, positions, token)
+            return logits, pools["k"], pools["v"]
+
+        return decode_paged
+
     def decode(params, cache, token):
         return model.decode_step(params, cache, token)
 
@@ -111,7 +148,8 @@ def make_decode_step(model: Model) -> Callable:
 
 
 def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True,
-                     train: bool = False, mesh=None):
+                     train: bool = False, mesh=None,
+                     decode_buckets: tuple[int, ...] | None = None):
     """Program the CMU for a serve/train run.
 
     Loads the persisted ``DataflowPlan`` from ``path`` when it exists;
@@ -132,6 +170,13 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     (or a migrated single-device v1–v4 file) is upgraded incrementally:
     the single-device decisions are kept verbatim and only the mesh level
     is tuned.  Returns the plan (or None when no path given).
+
+    With ``decode_buckets`` (a serving run's batch-size buckets) the plan
+    additionally carries per-layer **decode sub-plans** — skinny-M kernel
+    geometries tuned at M = bucket for every bucket, all up front, so the
+    scheduler's bucket-quantized decode steps never hit an unplanned
+    geometry at runtime.  A cache lacking some buckets (e.g. a v5 file, or
+    a run widening its slot count) is likewise upgraded incrementally.
     """
     if not path:
         return None
@@ -155,6 +200,7 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     gemms = model_gemms(cfg, tokens)
     plan, loaded = load_or_autotune(path, gemms, require_bwd=train,
                                     mesh=mesh_spec, measure=measure,
+                                    buckets=decode_buckets,
                                     epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
@@ -172,6 +218,13 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
         f", mesh dataflows {sorted(meshed)} on {plan.mesh.axes}"
         if plan.mesh else "",
     )
+    if decode_buckets:
+        logging.getLogger(__name__).info(
+            "decode sub-plans for buckets %s: %s",
+            tuple(decode_buckets),
+            {b: {lp.decode[b].dataflow.name for lp in plan.layers if lp.decode}
+             for b in decode_buckets},
+        )
     return plan
 
 

@@ -97,6 +97,13 @@ def linear(
         strip = 1
         if lp is not None:
             df, blk, strip = lp.dataflow, lp.block or DEFAULT_BLOCK, lp.strip
+            # decode-bucket dispatch: a skinny (decode-geometry) call whose
+            # row count fits a tuned batch-size bucket runs that bucket's
+            # plan — the serving scheduler quantizes its live batch to the
+            # same buckets, so every decode step hits a pre-tuned geometry
+            sub = lp.decode_plan(x2.shape[0]) if lp.decode else None
+            if sub is not None:
+                df, blk, strip = sub.dataflow, sub.block or DEFAULT_BLOCK, sub.strip
             if lp.bwd_dx is not None:
                 bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block, lp.bwd_dx.trans,
                           lp.bwd_dx.strip)
@@ -469,6 +476,9 @@ def _decode_core(q, k, v, kpos, pos, window: int, scale: float, axis: str | None
     """Flash-style decode attention over a (possibly seq-sharded) cache.
 
     q (B,1,H,hd); k/v (B,Sloc,Hkv,hd) local shard; kpos global key positions.
+    ``pos`` is a scalar (whole batch at one position) or a (B,) vector of
+    per-slot positions (the continuous-batching paged path, where every slot
+    is at a different depth in its own stream).
     With ``axis`` set (inside shard_map) the softmax is distributed:
     pmax for the max, psum for numerator/denominator — so a 32k..500k cache
     never gets gathered (observed: 40GB/step of cache all-gathers before).
@@ -479,10 +489,16 @@ def _decode_core(q, k, v, kpos, pos, window: int, scale: float, axis: str | None
     qg = q.reshape(B, 1, Hkv, g, hd)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
     s = s * scale
-    m = kpos <= pos
-    if window:
-        m = m & ((pos - kpos) < window)
-    s = jnp.where(m[None, None, None, None, :], s, -1e30)
+    if getattr(pos, "ndim", 0):
+        m = kpos[None, :] <= pos[:, None]
+        if window:
+            m = m & ((pos[:, None] - kpos[None, :]) < window)
+        s = jnp.where(m[:, None, None, None, :], s, -1e30)
+    else:
+        m = kpos <= pos
+        if window:
+            m = m & ((pos - kpos) < window)
+        s = jnp.where(m[None, None, None, None, :], s, -1e30)
     mx = jnp.max(s, axis=-1, keepdims=True)
     if axis is not None:
         mx = jax.lax.pmax(mx, axis)
@@ -554,6 +570,49 @@ def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, layers: int | None = N
     L = layers if layers is not None else cfg.num_layers
     shape = (L, batch, seq, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def attention_decode_paged(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    pk: jax.Array,
+    pv: jax.Array,
+    table: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against one layer's paged KV block pool.
+
+    x (B,1,D); pk/pv (num_blocks, bs, Hkv, hd) — this layer's block pools;
+    table (B, nb) int32 per-slot block tables; positions (B,) per-slot write
+    positions (= tokens already cached for that slot).  The new K/V lands at
+    ``(table[pos // bs], pos % bs)`` per slot, then attention runs over the
+    gathered dense view of each slot's table with the per-slot causal mask
+    of ``_decode_core``.  Pad slots of a bucketed batch point their whole
+    table at the reserved scratch block, so their writes never touch a live
+    request's blocks and their garbage reads are masked to exact zeros.
+    """
+    B, _, D = x.shape
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    if use_rope:
+        q = rope(q, positions[:, None], cfg.rope_theta)
+        k_new = rope(k_new, positions[:, None], cfg.rope_theta)
+    bs = pk.shape[1]
+    Hkv, hd = pk.shape[2], pk.shape[3]
+    blk = jnp.take_along_axis(table, (positions // bs)[:, None], axis=1)[:, 0]
+    off = positions % bs
+    pk = pk.at[blk, off].set(k_new[:, 0].astype(pk.dtype))
+    pv = pv.at[blk, off].set(v_new[:, 0].astype(pv.dtype))
+    # dense per-slot view: gathered entry j is the slot's logical position j
+    k = pk[table].reshape(B, -1, Hkv, hd)
+    v = pv[table].reshape(B, -1, Hkv, hd)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    o = _decode_core(q, k, v, jnp.arange(k.shape[1]), positions, window, scale, None)
+    out = linear(cfg, o.reshape(B, 1, cfg.q_dim), p["wo"], name="attn.wo")
+    return out, pk, pv
 
 
 # ---------------------------------------------------------------------------

@@ -101,6 +101,25 @@ def block_decode(
     return x + cfg.residual_scale * mo, cache
 
 
+def block_decode_paged(
+    cfg: ModelConfig, p: Params, x: jax.Array, pk: jax.Array, pv: jax.Array,
+    table: jax.Array, positions: jax.Array, window: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``block_decode`` against one layer's paged block pools (per-slot positions)."""
+    h = Lyr.norm(cfg, p["ln1"], x)
+    h, pk, pv = Lyr.attention_decode_paged(
+        cfg, p["attn"], h, pk, pv, table, positions, window=window)
+    x = x + cfg.residual_scale * h
+    h = Lyr.norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        mo, _ = Lyr.moe(cfg, p["moe"], h)
+        if "mlp" in p:
+            mo = mo + Lyr.mlp(cfg, p["mlp"], h)
+    else:
+        mo = Lyr.mlp(cfg, p["mlp"], h)
+    return x + cfg.residual_scale * mo, pk, pv
+
+
 # ---------------------------------------------------------------------------
 # the Model facade
 # ---------------------------------------------------------------------------
@@ -376,11 +395,19 @@ class Model:
             return self._prefill_encdec(params, batch, cache_len)
         raise ValueError(cfg.family)
 
-    def _prefill_dense(self, params, batch, cache_len):
+    def prefill_kv(self, params, batch):
+        """Forward the prompt and return ``(logits, k_all, v_all)`` with
+        k/v stacked ``(L, B, Sp, Hkv, hd)`` bf16 — no cache layout imposed.
+
+        This is the layout-agnostic half of prefill: ``_prefill_dense``
+        copies the K/V into a dense ``(L, B, cache_len, ...)`` cache, while
+        the paged serving path (``launch.scheduler``) scatters it into KV
+        block pools through a block table instead.  Dense/moe/vlm only.
+        """
         cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(f"prefill_kv covers dense/moe/vlm, not {cfg.family}")
         prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
-        logits, _ = self.forward(params, batch)
-        # recompute K/V into the cache via one pass of projections per layer
         if cfg.family == "vlm":
             vis = jnp.einsum(
                 "bsd,de->bse", batch["vision_embeds"].astype(self.dtype),
@@ -390,7 +417,6 @@ class Model:
         else:
             x = self._embed(params, batch["tokens"])
         B, Sp, _ = x.shape
-        cache = Lyr.init_kv_cache(cfg, B, cache_len)
         pat = len(cfg.window_pattern)
         gp = _group(params["layers"], cfg.num_layers // pat, pat)
 
@@ -408,9 +434,20 @@ class Model:
                 x, _ = block_apply(cfg, pj, x, cfg.window_pattern[j], prefix)
             return (x,), (jnp.stack(ks), jnp.stack(vs))
 
-        (_,), (k_all, v_all) = self._scan(body, (x,), (gp, jnp.arange(cfg.num_layers // pat)))
+        (x,), (k_all, v_all) = self._scan(body, (x,), (gp, jnp.arange(cfg.num_layers // pat)))
         k_all = k_all.reshape(cfg.num_layers, B, Sp, cfg.num_kv_heads, cfg.head_dim)
         v_all = v_all.reshape(cfg.num_layers, B, Sp, cfg.num_kv_heads, cfg.head_dim)
+        # logits come off the same pass: the scan's x walks through the exact
+        # ``block_apply`` sequence ``forward`` uses, so final-norm + lm_head
+        # here is bitwise-identical to a separate forward — at half the cost.
+        logits = self._logits(params, x[:, prefix:] if prefix else x)
+        return logits, k_all, v_all
+
+    def _prefill_dense(self, params, batch, cache_len):
+        cfg = self.cfg
+        logits, k_all, v_all = self.prefill_kv(params, batch)
+        B, Sp = k_all.shape[1], k_all.shape[2]
+        cache = Lyr.init_kv_cache(cfg, B, cache_len)
         cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_all, 0, axis=2)
         cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_all, 0, axis=2)
         return {"kv": cache, "pos": jnp.array(Sp, jnp.int32)}, logits[:, -1]
@@ -668,6 +705,48 @@ class Model:
             return logits, {**cache, "kv": {"k": nk, "v": nv}, "pos": pos + 1}
 
         raise ValueError(cfg.family)
+
+    def decode_step_paged(self, params: Params, pools, table, positions, token: jax.Array):
+        """One continuous-batching decode step over the paged KV block pools.
+
+        pools {"k","v"}: (L, num_blocks, bs, Hkv, hd); table (B, nb) int32
+        per-slot block tables; positions (B,) int32 per-slot write positions;
+        token (B,) int32.  Returns (logits (B, V), new pools).  Slot →
+        request mapping, admission, eviction and the block free list are the
+        scheduler's problem — this step is pure fixed-shape array math, one
+        jit signature per batch-size bucket.  Like ``decode_step``, the
+        pools ride the scan carry with per-layer dynamic slices so buffer
+        donation keeps one pool-sized buffer live.  Dense/moe/vlm only.
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"decode_step_paged covers dense/moe/vlm, not {cfg.family}")
+        x = params["embed"].astype(self.dtype)[token][:, None] * cfg.emb_scale
+        pat = len(cfg.window_pattern)
+        groups = cfg.num_layers // pat
+        gp = _group(params["layers"], groups, pat)
+
+        def gbody(carry, inp):
+            x, pool_k, pool_v = carry
+            lp, g = inp
+            for j in range(pat):
+                pj = jax.tree.map(lambda a, j=j: a[j], lp)
+                li = g * pat + j
+                kl = jax.lax.dynamic_index_in_dim(pool_k, li, 0, keepdims=False)
+                vl = jax.lax.dynamic_index_in_dim(pool_v, li, 0, keepdims=False)
+                x, kl, vl = block_decode_paged(
+                    cfg, pj, x, kl, vl, table, positions,
+                    window=cfg.window_pattern[j],
+                )
+                pool_k = jax.lax.dynamic_update_index_in_dim(pool_k, kl, li, 0)
+                pool_v = jax.lax.dynamic_update_index_in_dim(pool_v, vl, li, 0)
+            return (x, pool_k, pool_v), None
+
+        (x, nk, nv), _ = self._scan(
+            gbody, (x, pools["k"], pools["v"]), (gp, jnp.arange(groups)))
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"k": nk, "v": nv}
 
 
 def _mamba_final_state(cfg: ModelConfig, p: Params, h: jax.Array):

@@ -1,11 +1,15 @@
-"""Distributed runtime: fault tolerance, stragglers, gradient compression."""
+"""Distributed runtime: fault tolerance, stragglers, gradient compression, paged KV."""
 
 from .compression import compressed_psum, compression_ratio, dequantize_int8, quantize_int8
 from .fault_tolerance import ElasticController, RunnerConfig, SimulatedNodeFailure, TrainRunner
+from .kv_cache import SCRATCH_BLOCK, BlockAllocator, PagedKVCache, write_prefill_blocks
 from .straggler import ShardAssignment, StragglerConfig, StragglerTracker
 
 __all__ = [
+    "BlockAllocator",
     "ElasticController",
+    "PagedKVCache",
+    "SCRATCH_BLOCK",
     "RunnerConfig",
     "ShardAssignment",
     "SimulatedNodeFailure",
@@ -16,4 +20,5 @@ __all__ = [
     "compression_ratio",
     "dequantize_int8",
     "quantize_int8",
+    "write_prefill_blocks",
 ]

@@ -32,6 +32,7 @@ from repro.core import (
     mesh_shardable,
 )
 from repro.core.plan_cache import (
+    PLAN_CACHE_VERSION,
     activate_plan,
     load_or_autotune,
     load_plan,
@@ -105,7 +106,7 @@ def test_plan_json_roundtrip_with_mesh(tmp_path):
     loaded = load_plan(str(p))
     assert loaded.mesh == MESH_SPEC
     assert loaded.layers == plan.layers
-    assert json.load(open(p))["version"] == 5
+    assert json.load(open(p))["version"] == PLAN_CACHE_VERSION
 
 
 def _as_v4_file(v5_path, v4_path):
@@ -152,7 +153,7 @@ def test_v4_cache_migrates_to_v5_mesh_incrementally(tmp_path):
     assert got.mesh == MESH_SPEC
     assert all(l.mesh is not None for l in got.layers)
     payload = json.load(open(v4))
-    assert payload["version"] == 5 and payload["mesh"] is not None
+    assert payload["version"] == PLAN_CACHE_VERSION and payload["mesh"] is not None
 
 
 def test_plan_matches_rejects_other_mesh():

@@ -1,0 +1,397 @@
+"""Continuous-batching serving: block allocator properties, paged-decode
+equivalence, scheduler invariants, and the v6 bucketed plan-cache schema.
+
+The scheduler's contract is deterministic serving: greedy token streams
+bitwise identical to classic per-request ``prefill``/``decode_step``
+decoding, independent of arrival order, co-scheduled batch composition,
+and bucket padding.  These tests pin that contract, the paged KV cache's
+allocator safety (no double-allocation, frees return, graceful exhaustion),
+and the CMU side: decode sub-plans keyed on batch-size buckets survive a
+save/load roundtrip, v5 caches migrate and upgrade incrementally without
+touching their measured forward rows, and the pallas dispatch actually
+consults the bucket plans."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core import (
+    DECODE_BUCKETS,
+    activate_plan,
+    autotune_plan,
+    decode_bucket,
+    load_or_autotune,
+    load_plan,
+    model_epilogues,
+    model_gemms,
+    plan_matches,
+    save_plan,
+)
+from repro.core import cmu as cmu_mod
+from repro.core.cmu import Dataflow, LayerPlan
+from repro.launch.scheduler import (
+    Request,
+    ServeScheduler,
+    poisson_trace,
+    run_fixed_batch,
+    serve_buckets,
+)
+from repro.launch.serve import sequential_reference
+from repro.models import Model, get_config
+from repro.runtime import BlockAllocator, PagedKVCache, SCRATCH_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(num_blocks=st.integers(min_value=2, max_value=24),
+       seed=st.integers(min_value=0, max_value=999))
+def test_allocator_never_double_allocates(num_blocks, seed):
+    """A random alloc/free interleaving: every live block id is unique,
+    scratch is never handed out, frees return capacity, and the allocator
+    ends empty when everything is freed."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(num_blocks)
+    live: list[list[int]] = []
+    seen_live: set[int] = set()
+    for _ in range(40):
+        if live and rng.random() < 0.4:
+            blocks = live.pop(rng.integers(len(live)))
+            alloc.free(blocks)
+            seen_live -= set(blocks)
+        else:
+            n = int(rng.integers(1, max(2, num_blocks // 2)))
+            got = alloc.alloc(n)
+            if got is None:
+                assert alloc.free_blocks < n  # refusal only when short
+                continue
+            assert len(got) == n
+            assert SCRATCH_BLOCK not in got
+            assert not (set(got) & seen_live), "block handed out twice"
+            seen_live |= set(got)
+            live.append(got)
+        assert alloc.live_blocks == len(seen_live)
+    for blocks in live:
+        alloc.free(blocks)
+    assert alloc.live_blocks == 0
+    assert alloc.free_blocks == num_blocks - 1  # all but scratch
+
+
+def test_allocator_exhaustion_returns_none_and_recovers():
+    alloc = BlockAllocator(4)  # 3 usable
+    a = alloc.alloc(2)
+    assert a is not None and alloc.alloc(2) is None  # graceful, no raise
+    b = alloc.alloc(1)
+    assert b is not None and alloc.free_blocks == 0
+    alloc.free(a)
+    assert alloc.alloc(2) is not None
+
+
+def test_allocator_rejects_foreign_and_double_free():
+    alloc = BlockAllocator(4)
+    a = alloc.alloc(2)
+    alloc.free(a)
+    with pytest.raises(ValueError):
+        alloc.free(a)  # double free
+    with pytest.raises(ValueError):
+        alloc.free([SCRATCH_BLOCK])  # scratch is never owned
+
+
+# ---------------------------------------------------------------------------
+# bucket quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(m=st.integers(min_value=1, max_value=80))
+def test_decode_bucket_is_smallest_fitting(m):
+    b = decode_bucket(m)
+    fitting = [x for x in DECODE_BUCKETS if m <= x]
+    assert b == (min(fitting) if fitting else None)
+
+
+def test_serve_buckets_caps_at_capacity():
+    assert serve_buckets(8) == (8,)
+    assert serve_buckets(16) == (8, 16)
+    assert serve_buckets(12) == (8, 12)   # capacity itself is always a bucket
+    assert serve_buckets(64) == (8, 16, 32, 64)
+
+
+# ---------------------------------------------------------------------------
+# scheduler vs classic sequential decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("qwen3_4b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trace(cfg, n=8, rate=0.7, seed=11, max_prompt=14, max_gen=6):
+    return poisson_trace(n, vocab=cfg.vocab_size, max_prompt=max_prompt,
+                         max_gen=max_gen, rate=rate, seed=seed)
+
+
+def test_scheduler_matches_sequential_reference(smoke_model):
+    """Every admitted request finishes with exactly max_new tokens, all
+    KV blocks return to the pool, and each stream is bitwise identical to
+    classic per-request prefill/decode_step serving."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg)
+    sched = ServeScheduler(model, params, capacity=8, block_size=16,
+                           max_total_len=14 + 6)
+    results, stats = sched.run(trace)
+    assert set(results) == {r.rid for r in trace}
+    assert stats.prefills == len(trace)
+    assert sched.kv.allocator.live_blocks == 0
+    ref = sequential_reference(model, params, trace,
+                               sched.max_blocks * sched.block_size)
+    for r in trace:
+        got = results[r.rid]
+        assert got.tokens is not None and len(got.tokens) == r.max_new
+        assert got.admitted_step <= got.finished_step
+        np.testing.assert_array_equal(got.tokens, ref[r.rid])
+
+
+def test_streams_independent_of_batch_composition(smoke_model):
+    """The same trace served at capacity 2 and capacity 8 co-schedules
+    entirely different batches (and hits different buckets) — the token
+    streams must not change."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, seed=5)
+    wide = ServeScheduler(model, params, capacity=8, block_size=16,
+                          max_total_len=14 + 6).run(trace)[0]
+    narrow = ServeScheduler(model, params, capacity=2, block_size=16,
+                            max_total_len=14 + 6).run(trace)[0]
+    for r in trace:
+        np.testing.assert_array_equal(wide[r.rid].tokens, narrow[r.rid].tokens)
+
+
+def test_streams_independent_of_arrival_order(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, seed=7)
+    all_at_once = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                   for r in trace]
+    a = ServeScheduler(model, params, capacity=8, block_size=16,
+                       max_total_len=14 + 6).run(trace)[0]
+    b = ServeScheduler(model, params, capacity=8, block_size=16,
+                       max_total_len=14 + 6).run(all_at_once)[0]
+    for r in trace:
+        np.testing.assert_array_equal(a[r.rid].tokens, b[r.rid].tokens)
+
+
+def test_scheduler_queues_gracefully_on_block_exhaustion(smoke_model):
+    """A pool sized for ~2 concurrent requests forces later arrivals to
+    FIFO-wait for evictions; everyone still finishes, correctly."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, n=6, rate=0.0, seed=3)  # all arrive at step 0
+    sched = ServeScheduler(model, params, capacity=8, block_size=16,
+                           max_total_len=14 + 6,
+                           num_blocks=3)  # 2 usable blocks + scratch
+    results, stats = sched.run(trace)
+    assert max(stats.active_per_step) <= 2  # the pool really was the limit
+    assert max(stats.active_per_step) < len(trace)  # admission throttled
+    assert sched.kv.allocator.live_blocks == 0
+    ref = sequential_reference(model, params, trace,
+                               sched.max_blocks * sched.block_size)
+    for r in trace:
+        np.testing.assert_array_equal(results[r.rid].tokens, ref[r.rid])
+
+
+def test_oversized_request_rejected_up_front(smoke_model):
+    cfg, model, params = smoke_model
+    sched = ServeScheduler(model, params, capacity=4, block_size=16,
+                           max_total_len=32)
+    huge = [Request(rid=0, prompt=np.zeros(30, np.int32), max_new=10)]
+    with pytest.raises(ValueError, match="cache positions"):
+        sched.run(huge)
+
+
+def test_fixed_batch_baseline_same_model(smoke_model):
+    """The legacy loop still serves: right answer count, one token stream
+    per request at its own max_new."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, n=4, seed=2)
+    results, st_ = run_fixed_batch(model, params, trace)
+    assert set(results) == {r.rid for r in trace}
+    for r in trace:
+        assert len(results[r.rid]) == r.max_new
+    assert st_["row_steps"] == len(trace) * max(r.max_new for r in trace)
+
+
+# ---------------------------------------------------------------------------
+# plan cache v6: bucketed decode sub-plans
+# ---------------------------------------------------------------------------
+
+
+GEMMS = lambda cfg: model_gemms(cfg, tokens=64)  # noqa: E731
+
+
+def test_v6_roundtrip_and_bucket_lookup(tmp_path):
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    plan = autotune_plan(GEMMS(cfg), measure=False, decode_buckets=(8, 16),
+                         epilogue=model_epilogues(cfg))
+    path = os.path.join(tmp_path, "plan.json")
+    save_plan(path, plan)
+    with open(path) as f:
+        assert json.load(f)["version"] == 6
+    plan2 = load_plan(path)
+    assert plan2.has_decode((8, 16)) and not plan2.has_decode((8, 16, 32))
+    assert plan_matches(plan2, GEMMS(cfg), buckets=(8, 16))
+    assert not plan_matches(plan2, GEMMS(cfg), buckets=(8, 16, 32))
+    for lp in plan2.layers:
+        # lookup quantizes up: m=5 -> bucket 8; m=9 -> 16; m=17 -> None
+        assert lp.decode_plan(5) == lp.decode[8]
+        assert lp.decode_plan(9) == lp.decode[16]
+        assert lp.decode_plan(17) is None
+
+
+def test_v5_cache_loads_with_decode_none_and_upgrades(tmp_path):
+    """A v5 file (no decode sub-plans) loads with decode=None; a bucketed
+    load_or_autotune upgrades it incrementally — the measured forward rows
+    survive verbatim and only the buckets are tuned."""
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    plan = autotune_plan(GEMMS(cfg), measure=False,
+                         epilogue=model_epilogues(cfg))
+    path = os.path.join(tmp_path, "plan.json")
+    save_plan(path, plan)
+    with open(path) as f:
+        payload = json.load(f)
+    payload["version"] = 5
+    for row in payload["layers"]:
+        row.pop("decode", None)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+    v5 = load_plan(path)
+    assert all(lp.decode is None for lp in v5.layers)
+    assert plan_matches(v5, GEMMS(cfg))          # bucketless request: fine
+    assert not plan_matches(v5, GEMMS(cfg), buckets=(8,))
+
+    before = {lp.name: (lp.dataflow, lp.block, lp.strip) for lp in v5.layers}
+    up, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
+                                  measure=False,
+                                  epilogue=model_epilogues(cfg))
+    assert not loaded  # it had to tune (the buckets)
+    assert up.has_decode((8,))
+    for lp in up.layers:
+        assert (lp.dataflow, lp.block, lp.strip) == before[lp.name], \
+            "incremental bucket upgrade must not retune forward rows"
+    # and the upgrade was persisted as v6
+    with open(path) as f:
+        assert json.load(f)["version"] == 6
+    again, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
+                                     measure=False)
+    assert loaded  # second launch reloads, no tuning
+
+
+def test_widening_slots_adds_only_missing_buckets(tmp_path):
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    plan = autotune_plan(GEMMS(cfg), measure=False, decode_buckets=(8,))
+    path = os.path.join(tmp_path, "plan.json")
+    save_plan(path, plan)
+    before = {lp.name: lp.decode[8] for lp in plan.layers}
+    up, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8, 16),
+                                  measure=False)
+    assert not loaded and up.has_decode((8, 16))
+    for lp in up.layers:
+        assert lp.decode[8] == before[lp.name], \
+            "existing buckets must survive a widening verbatim"
+
+
+def test_bucket_tuning_is_measurement_driven(monkeypatch):
+    """Under a fake timer that penalizes whatever the analytical model would
+    pick for each decode bucket, the measured sub-plan lands on a different
+    (dataflow, block) — the bucket decisions come from the measurements, not
+    from the analytical ranking or the forward dataflow."""
+    from repro.core import hbm_traffic_bytes
+
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    analytic = autotune_plan(GEMMS(cfg), measure=False, decode_buckets=(8,))
+    pick = {lp.name: (lp.decode[8].dataflow, lp.decode[8].block)
+            for lp in analytic.layers}
+
+    def fake(gemm, df, blk, **kw):
+        base = hbm_traffic_bytes(gemm, df, *blk).time_s()
+        # decode-tune GEMMs are named "<layer>@b<bucket>"
+        name = gemm.name.split("@")[0]
+        if "@b" in gemm.name and (df, blk) == pick[name]:
+            return base * 100.0
+        return base
+
+    monkeypatch.setattr(cmu_mod, "measure_kernel", fake)
+    plan = autotune_plan(GEMMS(cfg), measure=True, iters=1,
+                         decode_buckets=(8,))
+    for lp in plan.layers:
+        got = (lp.decode[8].dataflow, lp.decode[8].block)
+        assert got != pick[lp.name], lp.name
+        assert lp.decode[8].source == "measured"
+
+
+def test_paged_decode_dispatches_bucket_plan(smoke_model):
+    """End to end on the pallas path: a scheduler run consults
+    LayerPlan.decode_plan at decode-trace time, only with bucket-sized row
+    counts, and its streams still match sequential decode."""
+    cfg, _, _ = smoke_model
+    cfg = cfg.replace(use_pallas=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    buckets = serve_buckets(4)
+    plan = autotune_plan(model_gemms(cfg, tokens=64), measure=False,
+                         decode_buckets=buckets,
+                         epilogue=model_epilogues(cfg))
+    activate_plan(plan)
+    try:
+        lookups = []
+        orig = LayerPlan.decode_plan
+
+        def recording(self, m):
+            sub = orig(self, m)
+            if sub is not None:
+                lookups.append((self.name, m))
+            return sub
+
+        trace = _trace(cfg, n=4, max_prompt=10, max_gen=4, seed=1)
+        sched = ServeScheduler(model, params, capacity=4, block_size=16,
+                               max_total_len=10 + 4)
+        with pytest.MonkeyPatch.context() as mp:
+            mp.setattr(LayerPlan, "decode_plan", recording)
+            results, _ = sched.run(trace)
+        assert lookups, "decode never consulted the bucket sub-plans"
+        assert {m for _, m in lookups} <= set(buckets)
+        ref = sequential_reference(model, params, trace,
+                                   sched.max_blocks * sched.block_size)
+        for r in trace:
+            np.testing.assert_array_equal(results[r.rid].tokens, ref[r.rid])
+    finally:
+        activate_plan(None)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache pools
+# ---------------------------------------------------------------------------
+
+
+def test_paged_cache_geometry(smoke_model):
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=6, block_size=16)
+    assert kv.k.shape == (cfg.num_layers, 6, 16, cfg.num_kv_heads, cfg.head_dim)
+    assert kv.k.dtype == jnp.bfloat16
+    assert kv.blocks_for(1) == 1 and kv.blocks_for(16) == 1
+    assert kv.blocks_for(17) == 2
+    blocks = kv.alloc(33)
+    assert blocks is not None and len(blocks) == 3
+    kv.free(blocks)
+    assert kv.allocator.live_blocks == 0
