@@ -137,9 +137,61 @@ def extra_serve_checks(rec) -> list[str]:
     return errors
 
 
+_ATTN_VARIANT = {"walltime_s": positive, "hbm_bytes": positive,
+                 "vmem_bytes": positive}
+
+ATTN_SCHEMA = Schema({
+    "config": {"seq": int, "kv": int, "heads": int, "kv_heads": int,
+               "head_dim": int, "group": int, "iters": int,
+               "interpret": bool, "buckets": nonempty_list},
+    "prefill": {"q": {**_ATTN_VARIANT, "block": nonempty_list},
+                "kv": {**_ATTN_VARIANT, "block": nonempty_list}},
+    "decode": dict,
+    "planned": {"sweep": str, "block": nonempty_list, "source": str,
+                "decode_kinds": dict},
+})
+
+
+def extra_attn_checks(rec) -> list[str]:
+    """The analytical orderings the schedule family exists to exploit."""
+    errors = []
+    pf = rec["prefill"]
+    if pf["q"]["block"] == pf["kv"]["block"]:
+        if pf["kv"]["hbm_bytes"] >= pf["q"]["hbm_bytes"]:
+            errors.append(
+                "kv-stationary must move less HBM than q-stationary at the "
+                "same blocks on a GQA prefill shape (K/V resident, Q streams)")
+        if pf["kv"]["vmem_bytes"] <= pf["q"]["vmem_bytes"]:
+            errors.append(
+                "kv-stationary must hold more VMEM than q-stationary "
+                "(whole-rows accumulator slab) — residency math drifted")
+    for b, row in rec["decode"].items():
+        for kind in ("paged", "gather"):
+            if kind not in row:
+                errors.append(f"decode[{b}]: missing kind '{kind}'")
+                continue
+            errors += [f"decode[{b}].{kind}: {m}"
+                       for m in Schema(_ATTN_VARIANT).errors(row[kind])]
+        if ("paged" in row and "gather" in row
+                and row["paged"]["hbm_bytes"] >= row["gather"]["hbm_bytes"]):
+            errors.append(
+                f"decode[{b}]: the in-place paged kernel must read less HBM "
+                "than the densifying gather (it skips the 3x cache copy)")
+    if rec["planned"]["sweep"] not in ("q", "kv"):
+        errors.append(f"planned.sweep {rec['planned']['sweep']!r} unknown")
+    bad = {b: k for b, k in rec["planned"]["decode_kinds"].items()
+           if k not in ("paged", "gather")}
+    if bad:
+        errors.append(f"planned.decode_kinds has unknown kinds: {bad}")
+    if {int(b) for b in rec["decode"]} != set(rec["config"]["buckets"]):
+        errors.append("decode buckets don't match config.buckets")
+    return errors
+
+
 VALIDATORS = {
     "BENCH_train_step.json": (TRAIN_STEP_SCHEMA, lambda rec: []),
     "BENCH_serve.json": (SERVE_SCHEMA, extra_serve_checks),
+    "BENCH_attn.json": (ATTN_SCHEMA, extra_attn_checks),
 }
 
 

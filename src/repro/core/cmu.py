@@ -44,10 +44,14 @@ from typing import NamedTuple
 
 from .dataflow import (
     ALL_DATAFLOWS,
+    ATTN_BLOCK_CANDIDATES,
     VMEM_BUDGET_BYTES,
+    AttnShape,
     ConvLayer,
     Dataflow,
     GemmShape,
+    attn_decode_traffic_bytes,
+    attn_traffic_bytes,
     best_kernel_dataflow,
     hbm_traffic_bytes,
     kernel_block_candidates,
@@ -101,6 +105,71 @@ def decode_bucket(m: int, buckets: tuple[int, ...] = DECODE_BUCKETS) -> int | No
         if m <= b:
             return b
     return None
+
+
+#: The layer row an attention schedule rides on.  Attention is not a GEMM the
+#: plan fingerprints (``plan_matches`` keys on (name, M, K, N)), so its
+#: schedule attaches to the query projection's row — one attention op per
+#: transformer layer shape, planned next to the projections that feed it.
+ATTN_ANCHOR = "attn.wq"
+
+#: Prefill sweep orders / decode kinds, mirroring
+#: ``kernels.flash_attention.ATTN_SWEEPS`` / ``ATTN_DECODE_KINDS`` (kept as
+#: literals here so the planning layer never imports kernel modules at
+#: module scope).
+ATTN_SWEEPS = ("q", "kv")
+ATTN_DECODE_KINDS = ("paged", "gather")
+
+
+@dataclass(frozen=True)
+class AttnPlan:
+    """One flash-attention schedule decision — the attention analogue of
+    ``GemmPlan``.  For the prefill row, ``sweep`` is the grid order
+    (``"q"`` / ``"kv"``) and ``block`` the ``(bq, bk)`` tile shape.  For
+    the per-bucket ``decode`` sub-plans, ``sweep`` is the decode *kind*
+    (``"paged"`` = the in-place Pallas block-table kernel, ``"gather"`` =
+    the pure-jnp densify baseline) and ``block`` is empty."""
+
+    sweep: str
+    block: tuple[int, ...]
+    est_cost: float
+    source: str = "analytical"  # "analytical" | "measured"
+    # decode sub-plans keyed by batch-size bucket, mirroring
+    # ``LayerPlan.decode``.  None = planned before serving buckets existed.
+    decode: dict[int, "AttnPlan"] | None = None
+
+    def decode_plan(self, m: int) -> "AttnPlan | None":
+        """The decode-attention sub-plan for an ``m``-slot dispatch: the
+        smallest tuned bucket that fits, else None (caller keeps the
+        gather baseline)."""
+        if not self.decode:
+            return None
+        b = decode_bucket(m, tuple(self.decode))
+        return self.decode.get(b) if b is not None else None
+
+    def to_row(self) -> dict:
+        return {
+            "sweep": self.sweep,
+            "block": list(self.block),
+            "est_cost": self.est_cost,
+            "source": self.source,
+            "decode": {str(b): p.to_row() for b, p in sorted(self.decode.items())}
+            if self.decode else None,
+        }
+
+    @classmethod
+    def from_row(cls, row: dict | None) -> "AttnPlan | None":
+        if row is None:
+            return None
+        dec = row.get("decode")
+        return cls(
+            sweep=row["sweep"],
+            block=tuple(row.get("block") or ()),
+            est_cost=row["est_cost"],
+            source=row.get("source", "analytical"),
+            decode={int(b): cls.from_row(r) for b, r in dec.items()}
+            if dec else None,
+        )
 
 
 @dataclass(frozen=True)
@@ -218,6 +287,10 @@ class LayerPlan:
     # dispatches a skinny-bm geometry instead of the prefill-sized forward
     # row.  None = plan predates serving (v1–v5) or was tuned without buckets.
     decode: dict[int, GemmPlan] | None = None
+    # flash-attention schedule (prefill sweep/blocks + per-bucket decode
+    # kinds), carried only by the ``ATTN_ANCHOR`` row.  None = plan predates
+    # attention scheduling (v1–v6) or was tuned without an attention shape.
+    attention: AttnPlan | None = None
 
     def decode_plan(self, m: int) -> GemmPlan | None:
         """The decode sub-plan for an ``m``-row dispatch: the smallest tuned
@@ -272,6 +345,23 @@ class DataflowPlan:
             for l in self.layers
         )
 
+    def has_attention(self, buckets: tuple[int, ...] = ()) -> bool:
+        """True when the anchor row carries an attention schedule, including
+        a decode sub-plan for every requested bucket — the bar a plan must
+        clear before it can drive ``attn_pallas`` without re-tuning."""
+        lp = self.get(ATTN_ANCHOR)
+        if lp is None or lp.attention is None:
+            return False
+        if not buckets:
+            return True
+        dec = lp.attention.decode
+        return dec is not None and all(b in dec for b in buckets)
+
+    def attention_plan(self) -> AttnPlan | None:
+        """The model's attention schedule (rides the ``ATTN_ANCHOR`` row)."""
+        lp = self.get(ATTN_ANCHOR)
+        return lp.attention if lp is not None else None
+
     def to_json(self) -> str:
         return json.dumps(
             [
@@ -290,6 +380,7 @@ class DataflowPlan:
                     "mesh": l.mesh.to_row() if l.mesh else None,
                     "decode": {str(b): gp.to_row() for b, gp in sorted(l.decode.items())}
                     if l.decode else None,
+                    "attention": l.attention.to_row() if l.attention else None,
                 }
                 for l in self.layers
             ],
@@ -317,6 +408,7 @@ class DataflowPlan:
                     mesh=MeshPlan.from_row(row.get("mesh")),
                     decode={int(b): GemmPlan.from_row(r) for b, r in dec.items()}
                     if dec else None,
+                    attention=AttnPlan.from_row(row.get("attention")),
                 )
             )
         return plan
@@ -652,6 +744,213 @@ def _tune_decode(
     return out
 
 
+def measure_attention(
+    shape: AttnShape,
+    sweep: str,
+    block: tuple[int, int],
+    *,
+    dtype=None,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: bool | None = None,
+) -> float:
+    """Walltime (s) of one real prefill flash-attention execution of
+    ``shape`` under (sweep, (bq, bk)) — the attention analogue of
+    ``measure_kernel``, and like it a module global so tests can substitute
+    a fake timer."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.flash_attention import mha_flash
+
+    if interpret is None:
+        interpret = ops.default_interpret()
+    dtype = dtype or jnp.float32
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (1, shape.seq, shape.heads, shape.head_dim), dtype)
+    k = jax.random.normal(kk, (1, shape.kv, shape.kv_heads, shape.head_dim), dtype)
+    v = jax.random.normal(kv, (1, shape.kv, shape.kv_heads, shape.head_dim), dtype)
+    bq, bk = block
+    run = lambda: mha_flash(q, k, v, causal=True, interpret=interpret,
+                            block_q=bq, block_k=bk, sweep=sweep)
+    for _ in range(warmup):
+        run().block_until_ready()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_attention_decode(
+    shape: AttnShape,
+    bucket: int,
+    kind: str,
+    *,
+    block_size: int = 16,
+    dtype=None,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: bool | None = None,
+) -> float:
+    """Walltime (s) of one bucketed decode-attention step over a proxy paged
+    cache: ``kind="paged"`` times the in-place Pallas block-table kernel,
+    ``kind="gather"`` the pure-jnp densify baseline — both jitted, so the
+    ranking compares the dispatches the serve scheduler would issue."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.flash_attention import (
+        paged_attention,
+        paged_attention_reference,
+    )
+
+    if interpret is None:
+        interpret = ops.default_interpret()
+    dtype = dtype or jnp.float32
+    cache_len = max(min(shape.kv, 64), block_size)
+    nb = -(-cache_len // block_size)
+    kq, kp = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.normal(kq, (bucket, shape.heads, shape.head_dim), dtype)
+    pools = jax.random.normal(
+        kp, (2, bucket * nb + 1, block_size, shape.kv_heads, shape.head_dim),
+        dtype)
+    table = 1 + jnp.arange(bucket * nb, dtype=jnp.int32).reshape(bucket, nb)
+    positions = jnp.full((bucket,), cache_len - 1, jnp.int32)
+    if kind == "paged":
+        run = jax.jit(lambda a, k_, v_, t, p: paged_attention(
+            a, k_, v_, t, p, interpret=interpret))
+    elif kind == "gather":
+        run = jax.jit(paged_attention_reference)
+    else:
+        raise ValueError(f"unknown decode attention kind {kind!r}")
+    args = (q, pools[0], pools[1], table, positions)
+    for _ in range(warmup):
+        run(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _attn_block_candidates(d: int) -> list[int]:
+    """(bq, bk) candidates covering one attention grid axis of extent ``d``:
+    the standard tile ladder up to the rounded extent, plus the
+    sublane-aligned exact fit when the axis is smaller than one tile (smoke
+    prefills, decode-folded rows)."""
+    rounded = max(-(-d // 128) * 128, 128)
+    cs = {c for c in ATTN_BLOCK_CANDIDATES if c <= rounded}
+    small = max(-(-d // 8) * 8, 8)
+    if small < 128:
+        cs.add(small)
+    return sorted(cs)
+
+
+def _tune_attention(
+    shape: AttnShape,
+    buckets: tuple[int, ...] | None = None,
+    *,
+    vmem_limit: int,
+    top_k: int,
+    measure: bool,
+    iters: int,
+    interpret: bool,
+    **_ignored,
+) -> AttnPlan:
+    """Tune the flash-attention schedule for one model shape: analytical
+    pruning over (sweep, bq, bk) under the VMEM budget — the same
+    analytical-rank → timed-execution flow as ``_tune_gemm`` — then
+    per-bucket decode-kind tuning (``_tune_attn_decode``) when serving
+    buckets are requested."""
+    ranked = []
+    seen = set()
+    for sweep in ATTN_SWEEPS:
+        for bq in _attn_block_candidates(shape.rows):
+            for bk in _attn_block_candidates(shape.kv):
+                # dedup schedules that clamp to the same effective geometry
+                eff = (sweep, min(bq, max(-(-shape.rows // 8) * 8, 8)),
+                       min(bk, max(-(-shape.kv // 8) * 8, 8)))
+                if eff in seen:
+                    continue
+                seen.add(eff)
+                cost = attn_traffic_bytes(shape, sweep, bq, bk)
+                if cost.vmem_bytes <= vmem_limit:
+                    ranked.append(
+                        (cost.time_s(), cost.hbm_bytes, sweep, (bq, bk)))
+    if not ranked:
+        raise ValueError(f"no attention schedule fits VMEM for {shape}")
+    ranked.sort(key=lambda t: (t[0], t[1]))
+    measurable = measure and not (interpret and shape.macs > MAX_INTERPRET_MACS)
+    if measurable:
+        timed = [
+            (measure_attention(shape, sweep, blk, iters=iters,
+                               interpret=interpret), sweep, blk)
+            for _, _, sweep, blk in ranked[:top_k]
+        ]
+        cost, sweep, blk = min(timed, key=lambda t: t[0])
+        plan = AttnPlan(sweep=sweep, block=blk, est_cost=cost,
+                        source="measured")
+    else:
+        cost, _, sweep, blk = ranked[0]
+        plan = AttnPlan(sweep=sweep, block=blk, est_cost=cost,
+                        source="analytical")
+    if buckets:
+        import dataclasses
+
+        plan = dataclasses.replace(
+            plan, decode=_tune_attn_decode(
+                shape, tuple(buckets), measure=measure, iters=iters,
+                interpret=interpret, vmem_limit=vmem_limit))
+    return plan
+
+
+def _tune_attn_decode(
+    shape: AttnShape,
+    buckets: tuple[int, ...],
+    *,
+    measure: bool,
+    iters: int,
+    interpret: bool,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    **_ignored,
+) -> dict[int, AttnPlan]:
+    """Pick the decode-attention kind (paged Pallas kernel vs pure-jnp
+    gather) per serving bucket: analytical HBM ranking — the gather's 3x
+    cache traffic makes "paged" the analytical default — then timed
+    execution of both kinds when measurement is on."""
+    out = {}
+    for b in sorted(set(buckets)):
+        ranked = []
+        for kind in ATTN_DECODE_KINDS:
+            cost = attn_decode_traffic_bytes(shape, kind, b)
+            if cost.vmem_bytes <= vmem_limit:
+                ranked.append((cost.time_s(), cost.hbm_bytes, kind))
+        ranked.sort(key=lambda t: (t[0], t[1]))
+        if measure:
+            timed = [
+                (measure_attention_decode(shape, b, kind, iters=iters,
+                                          interpret=interpret), kind)
+                for _, _, kind in ranked
+            ]
+            cost, kind = min(timed, key=lambda t: t[0])
+            out[b] = AttnPlan(sweep=kind, block=(), est_cost=cost,
+                              source="measured")
+        else:
+            cost, _, kind = ranked[0]
+            out[b] = AttnPlan(sweep=kind, block=(), est_cost=cost,
+                              source="analytical")
+    return out
+
+
 def autotune_plan(
     gemms: list[GemmShape],
     *,
@@ -664,6 +963,7 @@ def autotune_plan(
     train: bool = False,
     mesh: MeshSpec | None = None,
     decode_buckets: tuple[int, ...] | None = None,
+    attn: AttnShape | None = None,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
@@ -702,6 +1002,13 @@ def autotune_plan(
     M = bucket rows for each serving batch-size bucket, so a
     continuous-batching decode step dispatches a skinny-bm geometry keyed
     on its quantized live batch instead of the prefill-sized forward row.
+
+    With ``attn`` (the model's ``AttnShape``) the ``ATTN_ANCHOR`` row
+    additionally carries an **attention schedule** (``_tune_attention``):
+    the flash-kernel sweep order and (bq, bk) blocks for prefill, plus —
+    when ``decode_buckets`` is also given — the per-bucket decode-attention
+    kind (paged Pallas kernel vs jnp gather), all under the same
+    analytical-pruning → timed-execution flow and VMEM budget.
     """
     if interpret is None:
         from repro.kernels import ops
@@ -726,11 +1033,15 @@ def autotune_plan(
         if decode_buckets:
             dec = _tune_decode(gemm, tuple(decode_buckets),
                                epilogue=sig or False, **kw)
+        ap = None
+        if attn is not None and gemm.name == ATTN_ANCHOR:
+            ap = _tune_attention(attn, tuple(decode_buckets or ()) or None,
+                                 **kw)
         plan.layers.append(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
                       bwd_dx=dx, bwd_dw=dw, strip=fwd.strip, mesh=mp,
-                      decode=dec)
+                      decode=dec, attention=ap)
         )
     return plan
 
@@ -844,6 +1155,51 @@ def add_decode_subplans(
     return out
 
 
+def add_attention_subplans(
+    plan: DataflowPlan,
+    attn: AttnShape,
+    buckets: tuple[int, ...] | None = None,
+    *,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    top_k: int = 3,
+    measure: bool = True,
+    iters: int = 2,
+    interpret: bool | None = None,
+    **_ignored,
+) -> DataflowPlan:
+    """Upgrade a plan with an attention schedule **incrementally**: every
+    existing decision — forward rows, backward/mesh/decode sub-plans, and
+    any attention schedule already tuned — is kept verbatim (a migrated
+    v1–v6 cache keeps dispatching bit-for-bit everywhere else), and only
+    the missing attention pieces (the prefill schedule, or just the decode
+    buckets a wider run added) are tuned."""
+    import dataclasses
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
+              iters=iters, interpret=interpret)
+    want = tuple(sorted(set(buckets or ())))
+    out = DataflowPlan(mesh=plan.mesh)
+    for l in plan.layers:
+        if l.name != ATTN_ANCHOR:
+            out.layers.append(l)
+            continue
+        ap = l.attention
+        if ap is None:
+            ap = _tune_attention(attn, want or None, **kw)
+        else:
+            have = dict(ap.decode or {})
+            missing = tuple(b for b in want if b not in have)
+            if missing:
+                have.update(_tune_attn_decode(attn, missing, **kw))
+                ap = dataclasses.replace(ap, decode=have)
+        out.layers.append(dataclasses.replace(l, attention=ap))
+    return out
+
+
 def model_gemms(cfg, tokens: int) -> list[GemmShape]:
     """The per-layer GEMMs an LM config issues for one batch of ``tokens``.
 
@@ -866,6 +1222,19 @@ def model_gemms(cfg, tokens: int) -> list[GemmShape]:
             gemms.append(GemmShape(M=tokens, K=D, N=cfg.d_ff, name="mlp.w3"))
     gemms.append(GemmShape(M=tokens, K=D, N=cfg.padded_vocab, name="lm_head"))
     return gemms
+
+
+def model_attn_shape(cfg, tokens: int) -> AttnShape:
+    """The self-attention planning fingerprint an LM config issues for one
+    batch of ``tokens`` — the companion of ``model_gemms`` for the
+    ``ATTN_ANCHOR`` row's attention schedule."""
+    return AttnShape(
+        seq=tokens,
+        kv=tokens,
+        heads=cfg.num_heads,
+        kv_heads=cfg.num_kv_heads or cfg.num_heads,
+        head_dim=cfg.head_dim,
+    )
 
 
 def model_epilogues(cfg) -> dict[str, EpilogueSig]:

@@ -376,3 +376,116 @@ def mxu_utilization(shape: GemmShape, mxu: int = 128) -> float:
         return _ceil_div(d, mxu) * mxu
 
     return (shape.M * shape.K * shape.N) / (pad(shape.M) * pad(shape.K) * pad(shape.N))
+
+
+# ---------------------------------------------------------------------------
+# Attention: the flash-kernel schedule family's analytical cost model.
+# ---------------------------------------------------------------------------
+
+#: (bq, bk) candidates for the prefill flash-attention sweep.  Smaller than
+#: the GEMM grid: score tiles are (bq, bk) f32 in VMEM and the row axis of a
+#: smoke-sized prefill rarely exceeds a few hundred.
+ATTN_BLOCK_CANDIDATES = (64, 128, 256, 512)
+
+
+@dataclass(frozen=True)
+class AttnShape:
+    """Planning fingerprint of one self-attention op (per layer shape, like
+    ``GemmShape`` for projections).  ``seq``/``kv`` are query / key lengths,
+    heads are the model's query and KV head counts.  The GQA group axis is
+    folded into rows exactly as ``kernels.flash_attention.mha_flash`` does,
+    so the model prices what the kernel actually runs."""
+
+    seq: int
+    kv: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    name: str = "attn.sdpa"
+
+    @property
+    def group(self) -> int:
+        return max(self.heads // self.kv_heads, 1)
+
+    @property
+    def rows(self) -> int:
+        """Q rows per (batch, kv-head) kernel instance after GQA folding."""
+        return self.group * self.seq
+
+    @property
+    def flops(self) -> int:
+        # QK^T and PV each: 2 * rows * kv * hd MACs-as-flops, per kv head.
+        return 4 * self.kv_heads * self.rows * self.kv * self.head_dim
+
+    @property
+    def macs(self) -> int:
+        return self.flops // 2
+
+
+def attn_traffic_bytes(shape: AttnShape, sweep: str, bq: int, bk: int,
+                       in_bytes: int = 2, out_bytes: int = 2) -> KernelCost:
+    """HBM traffic + VMEM residency of one prefill flash-attention schedule.
+
+    Mirrors ``hbm_traffic_bytes`` for the attention grid.  Per kv head:
+
+      q-stationary:  q + o move once; K/V re-stream once per q tile:
+          hbm  = q_bytes + nq * kv_bytes + o_bytes
+          vmem = (bq + 2*bk) * hd * in + bq * hd * 4 + 2 * bq * 4
+      kv-stationary: K/V move once; q re-streams once per kv tile, and the
+      whole-rows accumulator slab (f32 acc + copy-out + m/l stats) is
+      VMEM-resident so the output flushes exactly once:
+          hbm  = kv_bytes + nkv * q_bytes + o_bytes
+          vmem = (bq + 2*bk) * hd * in + rows * hd * (4 + out) + 2 * rows * 4
+
+    The kv-stationary HBM win scales with ``nq = rows / bq`` — i.e. with
+    the GQA group and context length — which is exactly the paper's
+    shape-decides-the-dataflow argument transplanted to attention.
+    """
+    if sweep not in ("q", "kv"):
+        raise ValueError(f"unknown attention sweep {sweep!r}")
+    rows, kv, hd = shape.rows, shape.kv, shape.head_dim
+    bq, bk = min(bq, rows), min(bk, kv)
+    nq, nkv = _ceil_div(rows, bq), _ceil_div(kv, bk)
+    q_bytes = rows * hd * in_bytes
+    kv_bytes = 2 * kv * hd * in_bytes
+    o_bytes = rows * hd * out_bytes
+    blocks_vmem = (bq + 2 * bk) * hd * in_bytes
+    if sweep == "q":
+        hbm = shape.kv_heads * (q_bytes + nq * kv_bytes + o_bytes)
+        vmem = blocks_vmem + bq * hd * 4 + 2 * bq * 4
+    else:
+        hbm = shape.kv_heads * (kv_bytes + nkv * q_bytes + o_bytes)
+        vmem = blocks_vmem + rows * hd * (4 + out_bytes) + 2 * rows * 4
+    return KernelCost(hbm_bytes=hbm, mxu_flops=shape.flops, vmem_bytes=vmem)
+
+
+def attn_decode_traffic_bytes(shape: AttnShape, kind: str, bucket: int,
+                              cache_len: int | None = None,
+                              block_size: int = 16,
+                              in_bytes: int = 2,
+                              out_bytes: int = 2) -> KernelCost:
+    """HBM traffic of one bucketed decode-attention step over a paged cache.
+
+    ``kind="paged"`` reads each K/V block from the pool exactly once, in
+    place; ``kind="gather"`` is the pure-jnp baseline, which reads the pool,
+    writes a densified (bucket, cache_len) copy, then reads it back — 3x the
+    cache bytes.  The analytical gap is what makes the paged kernel the
+    default pick; a measured run can still override it per bucket.
+    """
+    if kind not in ("paged", "gather"):
+        raise ValueError(f"unknown decode attention kind {kind!r}")
+    kv = cache_len if cache_len is not None else shape.kv
+    hd, hkv = shape.head_dim, shape.kv_heads
+    q_bytes = bucket * shape.heads * hd * in_bytes
+    o_bytes = bucket * shape.heads * hd * out_bytes
+    cache_bytes = 2 * bucket * kv * hkv * hd * in_bytes
+    flops = 4 * bucket * shape.heads * kv * hd
+    if kind == "paged":
+        hbm = q_bytes + cache_bytes + o_bytes
+        vmem = (shape.heads * hd * in_bytes
+                + 2 * block_size * hkv * hd * in_bytes
+                + shape.heads * hd * 4 + 2 * shape.heads * 4)
+    else:
+        hbm = q_bytes + 3 * cache_bytes + o_bytes
+        vmem = (shape.heads * hd + 2 * kv * hkv * hd) * in_bytes
+    return KernelCost(hbm_bytes=hbm, mxu_flops=flops, vmem_bytes=vmem)

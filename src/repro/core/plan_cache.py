@@ -39,12 +39,19 @@ Schema versions (see docs/autotune.md for the full JSON shape):
     dispatches a skinny-bm geometry keyed on its quantized live batch (see
     docs/serving.md).  Null / absent = no buckets tuned; the forward row
     remains the dispatch for every M, exactly the v5 behaviour.
+  * v7 — the ``attn.wq`` anchor row may carry ``attention``: the flash
+    attention schedule ({sweep, block: [bq, bk], est_cost, source}) plus
+    per-bucket ``decode`` sub-rows (bucket -> {sweep: "paged"|"gather",
+    ...}) picking the decode-attention kind the serve scheduler dispatches
+    (see docs/autotune.md).  Null / absent = no attention schedule tuned;
+    the jnp attention paths remain the dispatch, exactly the v6 behaviour.
 
-Older files still **load and migrate**: v1–v5 files load with ``decode``
-None everywhere (and v1–v4 with ``mesh`` None), so their dispatch is
-bit-for-bit what it was — the decode-bucket and mesh axes only enter via
-incremental upgrades (``add_decode_subplans`` / ``add_mesh_subplans``,
-which keep every existing decision verbatim) or a re-tune.  v1 rows are
+Older files still **load and migrate**: v1–v6 files load with ``attention``
+None (v1–v5 also with ``decode`` None, v1–v4 with ``mesh`` None), so their
+dispatch is bit-for-bit what it was — the attention, decode-bucket and
+mesh axes only enter via incremental upgrades (``add_attention_subplans``
+/ ``add_decode_subplans`` / ``add_mesh_subplans``, which keep every
+existing decision verbatim) or a re-tune.  v1 rows are
 a strict subset (the
 backward sub-plans come back as None); v2 backward sub-plans — tuned on
 pre-transposed operands, so their (dataflow, block) remains valid for the
@@ -74,7 +81,9 @@ import os
 from .cmu import (
     TRANS_DX,
     TRANS_DW,
+    AttnShape,
     DataflowPlan,
+    add_attention_subplans,
     add_bwd_subplans,
     add_decode_subplans,
     add_mesh_subplans,
@@ -82,9 +91,9 @@ from .cmu import (
 )
 from .dist_dataflow import MeshSpec
 
-PLAN_CACHE_VERSION = 6
+PLAN_CACHE_VERSION = 7
 # older schemas this build can still read and migrate
-COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6)
+COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6, 7)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -144,10 +153,11 @@ def load_plan(path: str) -> DataflowPlan:
 
 
 def _migrate_rows(layers: list[dict], version: int) -> int:
-    """In-place v1/v2/v3 -> v6 row migration; returns migrated field count.
-    v4/v5 rows need no edits: v5 and v6 only *add* optional fields (the
-    ``mesh`` sub-plan and the per-bucket ``decode`` sub-plans), which
-    absent keys already decode as None (single-device, unbucketed).
+    """In-place v1/v2/v3 row migration; returns migrated field count.
+    v4–v6 rows need no edits: v5, v6 and v7 only *add* optional fields
+    (the ``mesh`` sub-plan, the per-bucket ``decode`` sub-plans, and the
+    anchor row's ``attention`` schedule), which absent keys already decode
+    as None (single-device, unbucketed, jnp attention).
 
     v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
     the copy-based path minus the copy — their (dataflow, block) stays valid
@@ -184,7 +194,8 @@ def _migrate_rows(layers: list[dict], version: int) -> int:
 
 def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
                  mesh: MeshSpec | None = None,
-                 buckets: tuple[int, ...] | None = None) -> bool:
+                 buckets: tuple[int, ...] | None = None,
+                 attn: AttnShape | None = None) -> bool:
     """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
     the guard against silently applying a cache tuned for another arch or
     batch geometry.  With ``require_bwd`` the plan must also carry backward
@@ -195,7 +206,9 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
     the mesh sub-plans are simply never consulted.  With ``buckets`` every
     layer must carry a decode sub-plan for every requested batch-size bucket
     (the serving bar); a bucket-tuned plan still matches a bucketless
-    request the same way."""
+    request the same way.  With ``attn`` the anchor row must carry an
+    attention schedule covering the requested buckets (the ``attn_pallas``
+    bar); an attention-tuned plan still matches a request without one."""
     planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
     wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
     if planned != wanted:
@@ -204,12 +217,15 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
         return False
     if buckets and not plan.has_decode(tuple(buckets)):
         return False
+    if attn is not None and not plan.has_attention(tuple(buckets or ())):
+        return False
     return plan.has_bwd() if require_bwd else True
 
 
 def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                      mesh: MeshSpec | None = None,
-                     buckets: tuple[int, ...] | None = None, **autotune_kw):
+                     buckets: tuple[int, ...] | None = None,
+                     attn: AttnShape | None = None, **autotune_kw):
     """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
     matches ``gemms``, otherwise a fresh autotune persisted to ``path``
     (when given).  A cache tuned for different GEMM shapes (other arch,
@@ -224,11 +240,14 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     single-device decision is kept verbatim.  The same applies to
     ``buckets``: a cache missing decode sub-plans for some requested
     batch-size bucket (a migrated v1–v5 file, or one tuned for fewer
-    buckets) gains only the missing buckets (``add_decode_subplans``)."""
+    buckets) gains only the missing buckets (``add_decode_subplans``), and
+    to ``attn``: a cache without an attention schedule (a migrated v1–v6
+    file) gains it via ``add_attention_subplans`` with every GEMM, mesh
+    and decode decision kept verbatim."""
     if path and os.path.exists(path):
         plan = load_plan(path)
         if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh,
-                        buckets=buckets):
+                        buckets=buckets, attn=attn):
             if autotune_kw.get("epilogue"):
                 import logging
 
@@ -270,13 +289,22 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                 )
                 plan = add_decode_subplans(plan, tuple(buckets),
                                            **autotune_kw)
+            if attn is not None and not plan.has_attention(
+                    tuple(buckets or ())):
+                log.warning(
+                    "plan cache %s lacks an attention schedule for %s; "
+                    "tuning the attention family only (keeping every "
+                    "existing decision)", path, attn,
+                )
+                plan = add_attention_subplans(plan, attn, tuple(buckets or ())
+                                              or None, **autotune_kw)
             save_plan(path, plan)
             return plan, False
         log.warning(
             "plan cache %s was tuned for different GEMM shapes; re-tuning", path
         )
     plan = autotune_plan(gemms, train=require_bwd, mesh=mesh,
-                         decode_buckets=buckets, **autotune_kw)
+                         decode_buckets=buckets, attn=attn, **autotune_kw)
     if path:
         save_plan(path, plan)
     return plan, False

@@ -1,6 +1,14 @@
 """Pallas TPU kernels for the Flex-TPU reproduction."""
 
-from .flash_attention import flash_attention, mha_flash
+from .flash_attention import (
+    ATTN_DECODE_KINDS,
+    ATTN_SWEEPS,
+    flash_attention,
+    flex_attention,
+    mha_flash,
+    paged_attention,
+    paged_attention_reference,
+)
 from .flex_matmul import (
     ACTIVATIONS,
     DEFAULT_BLOCK,
@@ -16,12 +24,15 @@ from .ref import attention_ref, blocked_matmul_ref, linear_ref, matmul_ref
 
 __all__ = [
     "ACTIVATIONS",
+    "ATTN_DECODE_KINDS",
+    "ATTN_SWEEPS",
     "DEFAULT_BLOCK",
     "attention_ref",
     "auto_matmul",
     "blocked_matmul_ref",
     "default_interpret",
     "flash_attention",
+    "flex_attention",
     "flex_linear",
     "flex_linear_sharded",
     "flex_matmul",
@@ -33,4 +44,6 @@ __all__ = [
     "matmul_ref",
     "mha_flash",
     "matmul_ws",
+    "paged_attention",
+    "paged_attention_reference",
 ]

@@ -29,6 +29,13 @@ per-request ``prefill``/``decode_step`` serving, independent of arrival
 order, co-scheduled batch composition, and bucket padding — pad slots
 write only the reserved scratch block and masked attention scores underflow
 to exact zeros, so a request's stream never depends on its neighbours.
+The contract holds on the Pallas decode-attention path too
+(``cfg.attn_pallas``): the paged flash kernel zeroes masked probabilities
+*multiplicatively* (``p = where(live, exp(s - m), 0)``) rather than relying
+on additive ``-1e30`` bias underflow alone, so pad rows — whose every key
+is masked — contribute exact-zero attention instead of a uniform
+distribution over garbage.  ``tests/test_serving.py`` pins stream-vs-
+sequential token equality per bucket with the Pallas path enabled.
 
 Host/device sync discipline: tokens live in a device-resident slot array
 and are folded back with lazy ``.at[].set``; the loop never calls

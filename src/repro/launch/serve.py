@@ -98,6 +98,10 @@ def main() -> None:
                          "save (bucketed decode sub-plans included)")
     ap.add_argument("--pallas", action="store_true",
                     help="dispatch projections to the fused flex kernels")
+    ap.add_argument("--attn-pallas", action="store_true",
+                    help="dispatch attention to the planned flex flash/"
+                         "paged kernel family (prefill flash + per-bucket "
+                         "Pallas paged decode)")
     ap.add_argument("--mesh", default="",
                     help="'DxM' data x model mesh (e.g. 2x4): serve "
                          "multi-device — projections run the shard_map-"
@@ -108,6 +112,8 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.pallas:
         cfg = cfg.replace(use_pallas=True)
+    if args.attn_pallas:
+        cfg = cfg.replace(attn_pallas=True)
     mesh = parse_mesh(args.mesh)
     if mesh is not None:
         from repro.models.sharding import use_rules

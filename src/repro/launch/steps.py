@@ -177,6 +177,14 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     scheduler's bucket-quantized decode steps never hit an unplanned
     geometry at runtime.  A cache lacking some buckets (e.g. a v5 file, or
     a run widening its slot count) is likewise upgraded incrementally.
+
+    When the config runs attention through the flex kernel family
+    (``attn_pallas``) the plan also carries an **attention schedule** on the
+    ``attn.wq`` anchor row: prefill sweep order + ``(bq, bk)`` block sizes,
+    plus per-bucket decode sub-plans (Pallas paged kernel vs jnp gather)
+    mirroring the GEMM decode dict.  v1–v6 caches load with the attention
+    row absent and are upgraded incrementally — every existing GEMM, mesh
+    and decode decision survives verbatim.
     """
     if not path:
         return None
@@ -198,9 +206,14 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
         if mesh_spec.tp <= 1:
             mesh_spec = None  # no tensor axis to compose over
     gemms = model_gemms(cfg, tokens)
+    attn = None
+    if getattr(cfg, "attn_pallas", False):
+        from repro.core import model_attn_shape
+
+        attn = model_attn_shape(cfg, tokens)
     plan, loaded = load_or_autotune(path, gemms, require_bwd=train,
                                     mesh=mesh_spec, measure=measure,
-                                    buckets=decode_buckets,
+                                    buckets=decode_buckets, attn=attn,
                                     epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
@@ -224,6 +237,14 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
             tuple(decode_buckets),
             {b: {lp.decode[b].dataflow.name for lp in plan.layers if lp.decode}
              for b in decode_buckets},
+        )
+    ap = plan.attention_plan() if attn is not None else None
+    if ap is not None:
+        logging.getLogger(__name__).info(
+            "attention schedule: %s-stationary bq=%d bk=%d (%s)%s",
+            ap.sweep, ap.block[0], ap.block[1], ap.source,
+            f", decode kinds {({b: s.sweep for b, s in sorted(ap.decode.items())})}"
+            if ap.decode else "",
         )
     return plan
 

@@ -67,6 +67,8 @@ class ModelConfig:
     use_pallas: bool = False        # pallas kernels (interpret on CPU); XLA path off
     attn_chunk: int = 128           # query-chunked attention block (per seq shard)
     attn_unroll: bool = False       # unroll the chunk scan (exact HLO cost probes)
+    attn_pallas: bool = False       # flash/paged attention via the planned
+                                    # flex kernel family (forward/serve only)
 
     def __post_init__(self):
         if self.head_dim == 0:

@@ -408,6 +408,31 @@ def _attention_core(
     return jnp.moveaxis(os, 0, 1).reshape(B, Sq, H, hd)
 
 
+def _attn_schedule() -> tuple[str, tuple[int, int]]:
+    """The planned flash-attention schedule (sweep, (bq, bk)) from the
+    active CMU plan's anchor row, or the default q-stationary 128x128 when
+    no plan (or a pre-v7 plan) is active."""
+    from repro.core.plan_cache import active_plan
+
+    plan = active_plan()
+    ap = plan.attention_plan() if plan is not None else None
+    if ap is None or len(ap.block) < 2:
+        return "q", (128, 128)
+    return ap.sweep, (ap.block[0], ap.block[1])
+
+
+def _attn_decode_kind(batch: int) -> str:
+    """The planned decode-attention kind for a ``batch``-slot dispatch:
+    the bucketed sub-plan's pick, else "paged" (turning ``attn_pallas`` on
+    without a plan runs the Pallas kernel everywhere)."""
+    from repro.core.plan_cache import active_plan
+
+    plan = active_plan()
+    ap = plan.attention_plan() if plan is not None else None
+    sub = ap.decode_plan(batch) if ap is not None else None
+    return sub.sweep if sub is not None else "paged"
+
+
 def attention_full(
     cfg: ModelConfig,
     p: Params,
@@ -445,7 +470,18 @@ def attention_full(
     mesh = active_mesh()
     ext = extent("act_seq")
     if mesh is None or ext <= 1 or S % ext:
-        o = _attention_core(cfg, q, k, v, q_offset=0, **core)
+        if (cfg.attn_pallas and causal and not window and not prefix_len
+                and Skv == S):
+            # the planned flex flash kernel (self-attention prefill shapes;
+            # windowed/prefix/cross layers keep the jnp core)
+            from repro.kernels.flash_attention import mha_flash
+            from repro.kernels.ops import default_interpret
+
+            sweep, (bq, bk) = _attn_schedule()
+            o = mha_flash(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          sweep=sweep, interpret=default_interpret())
+        else:
+            o = _attention_core(cfg, q, k, v, q_offset=0, **core)
     else:
         from jax.sharding import PartitionSpec as P
 
@@ -606,11 +642,23 @@ def attention_decode_paged(
     off = positions % bs
     pk = pk.at[blk, off].set(k_new[:, 0].astype(pk.dtype))
     pv = pv.at[blk, off].set(v_new[:, 0].astype(pv.dtype))
-    # dense per-slot view: gathered entry j is the slot's logical position j
-    k = pk[table].reshape(B, -1, Hkv, hd)
-    v = pv[table].reshape(B, -1, Hkv, hd)
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    o = _decode_core(q, k, v, jnp.arange(k.shape[1]), positions, window, scale, None)
+    if cfg.attn_pallas and _attn_decode_kind(B) == "paged":
+        # in-place Pallas kernel: K/V blocks stream straight out of the
+        # pools through the scalar-prefetched table — no dense gather copy
+        from repro.kernels.flash_attention import paged_attention
+        from repro.kernels.ops import default_interpret
+
+        o = paged_attention(q[:, 0], pk, pv, table, positions, scale=scale,
+                            window=window,
+                            interpret=default_interpret())[:, None]
+    else:
+        # dense per-slot view: gathered entry j is the slot's logical
+        # position j
+        k = pk[table].reshape(B, -1, Hkv, hd)
+        v = pv[table].reshape(B, -1, Hkv, hd)
+        o = _decode_core(q, k, v, jnp.arange(k.shape[1]), positions, window,
+                         scale, None)
     out = linear(cfg, o.reshape(B, 1, cfg.q_dim), p["wo"], name="attn.wo")
     return out, pk, pv
 

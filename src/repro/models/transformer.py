@@ -366,6 +366,10 @@ class Model:
         return self._logits(params, h), aux
 
     def loss(self, params: Params, batch: dict[str, jax.Array]):
+        if self.cfg.attn_pallas:
+            raise ValueError(
+                "attn_pallas is forward/serve only: the flex flash-attention "
+                "kernels define no VJP. Train with attn_pallas=False.")
         logits, aux = self.forward(params, batch)
         labels = batch["labels"]
         mask = (labels >= 0).astype(jnp.float32)

@@ -246,7 +246,7 @@ def test_v6_roundtrip_and_bucket_lookup(tmp_path):
     path = os.path.join(tmp_path, "plan.json")
     save_plan(path, plan)
     with open(path) as f:
-        assert json.load(f)["version"] == 6
+        assert json.load(f)["version"] == 7
     plan2 = load_plan(path)
     assert plan2.has_decode((8, 16)) and not plan2.has_decode((8, 16, 32))
     assert plan_matches(plan2, GEMMS(cfg), buckets=(8, 16))
@@ -289,9 +289,9 @@ def test_v5_cache_loads_with_decode_none_and_upgrades(tmp_path):
     for lp in up.layers:
         assert (lp.dataflow, lp.block, lp.strip) == before[lp.name], \
             "incremental bucket upgrade must not retune forward rows"
-    # and the upgrade was persisted as v6
+    # and the upgrade was persisted as the current schema version
     with open(path) as f:
-        assert json.load(f)["version"] == 6
+        assert json.load(f)["version"] == 7
     again, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
                                      measure=False)
     assert loaded  # second launch reloads, no tuning
@@ -377,6 +377,46 @@ def test_paged_decode_dispatches_bucket_plan(smoke_model):
             np.testing.assert_array_equal(results[r.rid].tokens, ref[r.rid])
     finally:
         activate_plan(None)
+
+
+def test_scheduler_matches_sequential_with_pallas_attention():
+    """Masking-contract regression, end to end: with the Pallas decode-
+    attention path enabled (``attn_pallas``), bucket-pad rows are *fully
+    masked* — the kernel must zero their probabilities multiplicatively
+    (additive -1e30 bias alone leaves exp(0)=1 per dead key once a whole
+    block is masked) so the scheduler's pad-row exact-zero guarantee still
+    composes.  Pin stream-vs-sequential token equality for every bucket the
+    capacities exercise, and that the Pallas kernel really dispatched."""
+    import importlib
+
+    # the package re-exports the flash_attention *function*, shadowing the
+    # submodule attribute; import_module resolves the real module
+    fa = importlib.import_module("repro.kernels.flash_attention")
+
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True,
+                                                     attn_pallas=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = _trace(cfg)
+    calls = []
+    orig = fa.paged_attention
+
+    def recording(*args, **kw):
+        calls.append(args[0].shape[0])  # decode batch (bucket) sizes
+        return orig(*args, **kw)
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(fa, "paged_attention", recording)
+        ref = sequential_reference(model, params, trace, 14 + 6 + 12)
+        for capacity in (2, 8):  # different co-scheduling -> buckets 2 and 8
+            sched = ServeScheduler(model, params, capacity=capacity,
+                                   block_size=16, max_total_len=14 + 6)
+            results, _ = sched.run(trace)
+            for r in trace:
+                np.testing.assert_array_equal(results[r.rid].tokens,
+                                              ref[r.rid])
+    assert calls, "scheduler decode never dispatched the Pallas kernel"
+    assert set(calls) <= set(serve_buckets(2)) | set(serve_buckets(8))
 
 
 # ---------------------------------------------------------------------------
