@@ -188,10 +188,73 @@ def extra_attn_checks(rec) -> list[str]:
     return errors
 
 
+_SSM_VARIANT = {"chunk": int, "walltime_s": positive, "hbm_bytes": positive,
+                "vmem_bytes": positive}
+
+SSM_SCHEMA = Schema({
+    "config": {"batch": int, "seq": int, "heads": int, "key_dim": int,
+               "val_dim": int, "post_update": bool, "iters": int,
+               "interpret": bool, "buckets": nonempty_list},
+    "prefill": dict,
+    "decode": dict,
+    "planned": {"sweep": str, "chunk": int, "source": str,
+                "decode_kinds": dict},
+})
+
+
+def extra_ssm_checks(rec) -> list[str]:
+    """The analytical orderings the scan schedule family exists to exploit."""
+    errors = []
+    for chunk, row in rec["prefill"].items():
+        for sweep in ("state", "out"):
+            if sweep not in row:
+                errors.append(f"prefill[{chunk}]: missing sweep '{sweep}'")
+                continue
+            errors += [f"prefill[{chunk}].{sweep}: {m}"
+                       for m in Schema(_SSM_VARIANT).errors(row[sweep])]
+        if "state" in row and "out" in row:
+            if row["state"]["hbm_bytes"] >= row["out"]["hbm_bytes"]:
+                errors.append(
+                    f"prefill[{chunk}]: state-stationary must move less HBM "
+                    "than the out-streamed sweep at the same chunk (the "
+                    "state never round-trips) — traffic math drifted")
+            if row["state"]["vmem_bytes"] < row["out"]["vmem_bytes"]:
+                errors.append(
+                    f"prefill[{chunk}]: state-stationary must hold at least "
+                    "as much VMEM (the whole state slab stays resident)")
+    for b, row in rec["decode"].items():
+        for kind in ("fused", "einsum"):
+            if kind not in row:
+                errors.append(f"decode[{b}]: missing kind '{kind}'")
+                continue
+            errors += [f"decode[{b}].{kind}: {m}"
+                       for m in Schema({"walltime_s": positive,
+                                        "hbm_bytes": positive,
+                                        "vmem_bytes": positive,
+                                        }).errors(row[kind])]
+        if ("fused" in row and "einsum" in row
+                and row["fused"]["hbm_bytes"] >= row["einsum"]["hbm_bytes"]):
+            errors.append(
+                f"decode[{b}]: the fused step kernel must read less HBM "
+                "than the jnp recurrence (no k v^T intermediate round-trip)")
+    if rec["planned"]["sweep"] not in ("state", "out"):
+        errors.append(f"planned.sweep {rec['planned']['sweep']!r} unknown")
+    if rec["planned"]["chunk"] <= 0:
+        errors.append(f"planned.chunk {rec['planned']['chunk']} not positive")
+    bad = {b: k for b, k in rec["planned"]["decode_kinds"].items()
+           if k not in ("fused", "einsum")}
+    if bad:
+        errors.append(f"planned.decode_kinds has unknown kinds: {bad}")
+    if {int(b) for b in rec["decode"]} != set(rec["config"]["buckets"]):
+        errors.append("decode buckets don't match config.buckets")
+    return errors
+
+
 VALIDATORS = {
     "BENCH_train_step.json": (TRAIN_STEP_SCHEMA, lambda rec: []),
     "BENCH_serve.json": (SERVE_SCHEMA, extra_serve_checks),
     "BENCH_attn.json": (ATTN_SCHEMA, extra_attn_checks),
+    "BENCH_ssm.json": (SSM_SCHEMA, extra_ssm_checks),
 }
 
 

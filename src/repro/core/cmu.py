@@ -45,16 +45,20 @@ from typing import NamedTuple
 from .dataflow import (
     ALL_DATAFLOWS,
     ATTN_BLOCK_CANDIDATES,
+    SCAN_CHUNK_CANDIDATES,
     VMEM_BUDGET_BYTES,
     AttnShape,
     ConvLayer,
     Dataflow,
     GemmShape,
+    ScanShape,
     attn_decode_traffic_bytes,
     attn_traffic_bytes,
     best_kernel_dataflow,
     hbm_traffic_bytes,
     kernel_block_candidates,
+    scan_decode_traffic_bytes,
+    scan_traffic_bytes,
     strip_blocks,
     strip_candidates,
     systolic_cycles,
@@ -120,6 +124,20 @@ ATTN_ANCHOR = "attn.wq"
 ATTN_SWEEPS = ("q", "kv")
 ATTN_DECODE_KINDS = ("paged", "gather")
 
+#: The layer row a chunked-scan schedule rides on.  Like attention, the SSM
+#: scan is not a GEMM the plan fingerprints, so its schedule attaches to the
+#: one row every family emits — the lm_head projection (SSM/hybrid configs
+#: have no ``attn.wq`` usage of their own; hybrid's shared block does, but
+#: the scan is a property of the *backbone* layers, not that one block).
+SCAN_ANCHOR = "lm_head"
+
+#: Chunk-grid sweep orders / decode kinds, mirroring
+#: ``kernels.flex_scan.SCAN_SWEEPS`` / ``SCAN_DECODE_KINDS`` (kept as
+#: literals here so the planning layer never imports kernel modules at
+#: module scope).
+SCAN_SWEEPS = ("state", "out")
+SCAN_DECODE_KINDS = ("fused", "einsum")
+
 
 @dataclass(frozen=True)
 class AttnPlan:
@@ -165,6 +183,58 @@ class AttnPlan:
         return cls(
             sweep=row["sweep"],
             block=tuple(row.get("block") or ()),
+            est_cost=row["est_cost"],
+            source=row.get("source", "analytical"),
+            decode={int(b): cls.from_row(r) for b, r in dec.items()}
+            if dec else None,
+        )
+
+
+@dataclass(frozen=True)
+class ScanPlan:
+    """One chunked-scan schedule decision — the SSM analogue of
+    ``AttnPlan``.  For the prefill row, ``sweep`` is where the running
+    (N, M) state lives across the chunk grid (``"state"`` = VMEM-resident
+    slab, ``"out"`` = HBM-streamed per-(b,h) block) and ``chunk`` the
+    intra-chunk length L.  For the per-bucket ``decode`` sub-plans,
+    ``sweep`` is the decode *kind* (``"fused"`` = the single Pallas step
+    kernel, ``"einsum"`` = the jnp recurrence) and ``chunk`` is 0."""
+
+    sweep: str
+    chunk: int
+    est_cost: float
+    source: str = "analytical"  # "analytical" | "measured"
+    # decode sub-plans keyed by batch-size bucket, mirroring
+    # ``AttnPlan.decode``.  None = planned before serving buckets existed.
+    decode: dict[int, "ScanPlan"] | None = None
+
+    def decode_plan(self, m: int) -> "ScanPlan | None":
+        """The decode-scan sub-plan for an ``m``-slot dispatch: the smallest
+        tuned bucket that fits, else None (caller keeps the fused
+        default)."""
+        if not self.decode:
+            return None
+        b = decode_bucket(m, tuple(self.decode))
+        return self.decode.get(b) if b is not None else None
+
+    def to_row(self) -> dict:
+        return {
+            "sweep": self.sweep,
+            "chunk": self.chunk,
+            "est_cost": self.est_cost,
+            "source": self.source,
+            "decode": {str(b): p.to_row() for b, p in sorted(self.decode.items())}
+            if self.decode else None,
+        }
+
+    @classmethod
+    def from_row(cls, row: dict | None) -> "ScanPlan | None":
+        if row is None:
+            return None
+        dec = row.get("decode")
+        return cls(
+            sweep=row["sweep"],
+            chunk=int(row.get("chunk") or 0),
             est_cost=row["est_cost"],
             source=row.get("source", "analytical"),
             decode={int(b): cls.from_row(r) for b, r in dec.items()}
@@ -291,6 +361,10 @@ class LayerPlan:
     # kinds), carried only by the ``ATTN_ANCHOR`` row.  None = plan predates
     # attention scheduling (v1–v6) or was tuned without an attention shape.
     attention: AttnPlan | None = None
+    # chunked-scan schedule (prefill sweep/chunk + per-bucket decode kinds),
+    # carried only by the ``SCAN_ANCHOR`` row.  None = plan predates scan
+    # scheduling (v1–v7) or was tuned without a scan shape.
+    scan: ScanPlan | None = None
 
     def decode_plan(self, m: int) -> GemmPlan | None:
         """The decode sub-plan for an ``m``-row dispatch: the smallest tuned
@@ -362,6 +436,25 @@ class DataflowPlan:
         lp = self.get(ATTN_ANCHOR)
         return lp.attention if lp is not None else None
 
+    def has_scan(self, buckets: tuple[int, ...] = ()) -> bool:
+        """True when the anchor row carries a chunked-scan schedule,
+        including a decode sub-plan for every requested bucket — the bar a
+        plan must clear before it can drive ``ssm_pallas`` without
+        re-tuning."""
+        lp = self.get(SCAN_ANCHOR)
+        if lp is None or lp.scan is None:
+            return False
+        if not buckets:
+            return True
+        dec = lp.scan.decode
+        return dec is not None and all(b in dec for b in buckets)
+
+    def scan_plan(self) -> ScanPlan | None:
+        """The model's chunked-scan schedule (rides the ``SCAN_ANCHOR``
+        row)."""
+        lp = self.get(SCAN_ANCHOR)
+        return lp.scan if lp is not None else None
+
     def to_json(self) -> str:
         return json.dumps(
             [
@@ -381,6 +474,7 @@ class DataflowPlan:
                     "decode": {str(b): gp.to_row() for b, gp in sorted(l.decode.items())}
                     if l.decode else None,
                     "attention": l.attention.to_row() if l.attention else None,
+                    "scan": l.scan.to_row() if l.scan else None,
                 }
                 for l in self.layers
             ],
@@ -409,6 +503,7 @@ class DataflowPlan:
                     decode={int(b): GemmPlan.from_row(r) for b, r in dec.items()}
                     if dec else None,
                     attention=AttnPlan.from_row(row.get("attention")),
+                    scan=ScanPlan.from_row(row.get("scan")),
                 )
             )
         return plan
@@ -951,6 +1046,212 @@ def _tune_attn_decode(
     return out
 
 
+def _scan_inputs(shape: ScanShape, seq: int, dtype):
+    """Random (r, k, v, log_w, u) probe operands for one scan timing run —
+    log_w drawn in the clipped [LOG_DECAY_MIN, -1e-6] band the models
+    produce, u only for the RWKV (pre-update) convention."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.ssm import LOG_DECAY_MIN
+
+    B, H = shape.batch, shape.heads
+    n, m = shape.key_dim, shape.val_dim
+    kr, kk, kv, kw, ku = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(kr, (B, seq, H, n), dtype)
+    k = jax.random.normal(kk, (B, seq, H, n), dtype)
+    v = jax.random.normal(kv, (B, seq, H, m), dtype)
+    lw = jnp.clip(
+        -jax.nn.softplus(jax.random.normal(kw, (B, seq, H, n))),
+        LOG_DECAY_MIN, -1e-6).astype(jnp.float32)
+    u = (None if shape.post_update
+         else jax.random.normal(ku, (H, n), jnp.float32) * 0.5)
+    return r, k, v, lw, u
+
+
+def measure_scan(
+    shape: ScanShape,
+    sweep: str,
+    chunk: int,
+    *,
+    dtype=None,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: bool | None = None,
+) -> float:
+    """Walltime (s) of one real prefill chunked-scan execution of ``shape``
+    under (sweep, chunk) — the scan analogue of ``measure_attention``, and
+    like it a module global so tests can substitute a fake timer."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.flex_scan import flex_scan
+
+    if interpret is None:
+        interpret = ops.default_interpret()
+    dtype = dtype or jnp.float32
+    seq = -(-shape.seq // chunk) * chunk  # the padded T the model dispatches
+    r, k, v, lw, u = _scan_inputs(shape, seq, dtype)
+    run = lambda: flex_scan(r, k, v, lw, u, chunk=chunk, sweep=sweep,
+                            post_update=shape.post_update,
+                            interpret=interpret)[0]
+    for _ in range(warmup):
+        run().block_until_ready()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_scan_decode(
+    shape: ScanShape,
+    bucket: int,
+    kind: str,
+    *,
+    dtype=None,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: bool | None = None,
+) -> float:
+    """Walltime (s) of one bucketed decode-scan step: ``kind="fused"`` times
+    the single Pallas step kernel, ``kind="einsum"`` the jnp recurrence —
+    both jitted, so the ranking compares the dispatches the decode step
+    would issue."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.flex_scan import flex_recurrent_step
+    from repro.models.ssm import recurrent_step
+
+    if interpret is None:
+        interpret = ops.default_interpret()
+    dtype = dtype or jnp.float32
+    bshape = ScanShape(batch=bucket, seq=1, heads=shape.heads,
+                       key_dim=shape.key_dim, val_dim=shape.val_dim,
+                       post_update=shape.post_update)
+    r, k, v, lw, u = _scan_inputs(bshape, 1, dtype)
+    r, k, v, lw = r[:, 0], k[:, 0], v[:, 0], lw[:, 0]
+    S = jnp.zeros((bucket, shape.heads, shape.key_dim, shape.val_dim),
+                  jnp.float32)
+    if kind == "fused":
+        run = jax.jit(lambda *a: flex_recurrent_step(
+            *a, post_update=shape.post_update, interpret=interpret)[0])
+    elif kind == "einsum":
+        run = jax.jit(lambda *a: recurrent_step(
+            *a, post_update=shape.post_update)[0])
+    else:
+        raise ValueError(f"unknown decode scan kind {kind!r}")
+    args = (r, k, v, lw, S, u)
+    for _ in range(warmup):
+        run(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _tune_scan(
+    shape: ScanShape,
+    buckets: tuple[int, ...] | None = None,
+    *,
+    vmem_limit: int,
+    top_k: int,
+    measure: bool,
+    iters: int,
+    interpret: bool,
+    **_ignored,
+) -> ScanPlan:
+    """Tune the chunked-scan schedule for one model shape: analytical
+    pruning over (sweep, chunk) under the VMEM budget — the same
+    analytical-rank → timed-execution flow as ``_tune_attention`` — then
+    per-bucket decode-kind tuning (``_tune_scan_decode``) when serving
+    buckets are requested."""
+    ranked = []
+    seen = set()
+    for sweep in SCAN_SWEEPS:
+        for chunk in SCAN_CHUNK_CANDIDATES:
+            # dedup schedules whose padded grid collapses to one chunk
+            eff = (sweep, min(chunk, -(-shape.seq // 8) * 8))
+            if eff in seen:
+                continue
+            seen.add(eff)
+            cost = scan_traffic_bytes(shape, sweep, chunk)
+            if cost.vmem_bytes <= vmem_limit:
+                ranked.append((cost.time_s(), cost.hbm_bytes, sweep, chunk))
+    if not ranked:
+        raise ValueError(f"no scan schedule fits VMEM for {shape}")
+    ranked.sort(key=lambda t: (t[0], t[1]))
+    measurable = measure and not (interpret and shape.macs > MAX_INTERPRET_MACS)
+    if measurable:
+        timed = [
+            (measure_scan(shape, sweep, chunk, iters=iters,
+                          interpret=interpret), sweep, chunk)
+            for _, _, sweep, chunk in ranked[:top_k]
+        ]
+        cost, sweep, chunk = min(timed, key=lambda t: t[0])
+        plan = ScanPlan(sweep=sweep, chunk=chunk, est_cost=cost,
+                        source="measured")
+    else:
+        cost, _, sweep, chunk = ranked[0]
+        plan = ScanPlan(sweep=sweep, chunk=chunk, est_cost=cost,
+                        source="analytical")
+    if buckets:
+        import dataclasses
+
+        plan = dataclasses.replace(
+            plan, decode=_tune_scan_decode(
+                shape, tuple(buckets), measure=measure, iters=iters,
+                interpret=interpret, vmem_limit=vmem_limit))
+    return plan
+
+
+def _tune_scan_decode(
+    shape: ScanShape,
+    buckets: tuple[int, ...],
+    *,
+    measure: bool,
+    iters: int,
+    interpret: bool,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    **_ignored,
+) -> dict[int, ScanPlan]:
+    """Pick the decode-scan kind (fused Pallas step kernel vs jnp
+    recurrence) per serving bucket: analytical HBM ranking — the jnp path's
+    materialized k v^T intermediate makes "fused" the analytical default —
+    then timed execution of both kinds when measurement is on."""
+    out = {}
+    for b in sorted(set(buckets)):
+        ranked = []
+        for kind in SCAN_DECODE_KINDS:
+            cost = scan_decode_traffic_bytes(shape, kind, b)
+            if cost.vmem_bytes <= vmem_limit:
+                ranked.append((cost.time_s(), cost.hbm_bytes, kind))
+        ranked.sort(key=lambda t: (t[0], t[1]))
+        if measure:
+            timed = [
+                (measure_scan_decode(shape, b, kind, iters=iters,
+                                     interpret=interpret), kind)
+                for _, _, kind in ranked
+            ]
+            cost, kind = min(timed, key=lambda t: t[0])
+            out[b] = ScanPlan(sweep=kind, chunk=0, est_cost=cost,
+                              source="measured")
+        else:
+            cost, _, kind = ranked[0]
+            out[b] = ScanPlan(sweep=kind, chunk=0, est_cost=cost,
+                              source="analytical")
+    return out
+
+
 def autotune_plan(
     gemms: list[GemmShape],
     *,
@@ -964,6 +1265,7 @@ def autotune_plan(
     mesh: MeshSpec | None = None,
     decode_buckets: tuple[int, ...] | None = None,
     attn: AttnShape | None = None,
+    scan: ScanShape | None = None,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
@@ -1009,6 +1311,13 @@ def autotune_plan(
     when ``decode_buckets`` is also given — the per-bucket decode-attention
     kind (paged Pallas kernel vs jnp gather), all under the same
     analytical-pruning → timed-execution flow and VMEM budget.
+
+    With ``scan`` (the model's ``ScanShape``) the ``SCAN_ANCHOR`` row
+    additionally carries a **chunked-scan schedule** (``_tune_scan``): the
+    state-residency sweep and chunk length for SSM/RWKV prefill, plus —
+    when ``decode_buckets`` is also given — the per-bucket decode-scan
+    kind (fused Pallas step kernel vs jnp recurrence), under the same
+    flow and budget as attention.
     """
     if interpret is None:
         from repro.kernels import ops
@@ -1037,11 +1346,14 @@ def autotune_plan(
         if attn is not None and gemm.name == ATTN_ANCHOR:
             ap = _tune_attention(attn, tuple(decode_buckets or ()) or None,
                                  **kw)
+        sp = None
+        if scan is not None and gemm.name == SCAN_ANCHOR:
+            sp = _tune_scan(scan, tuple(decode_buckets or ()) or None, **kw)
         plan.layers.append(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
                       bwd_dx=dx, bwd_dw=dw, strip=fwd.strip, mesh=mp,
-                      decode=dec, attention=ap)
+                      decode=dec, attention=ap, scan=sp)
         )
     return plan
 
@@ -1200,6 +1512,51 @@ def add_attention_subplans(
     return out
 
 
+def add_scan_subplans(
+    plan: DataflowPlan,
+    scan: ScanShape,
+    buckets: tuple[int, ...] | None = None,
+    *,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    top_k: int = 3,
+    measure: bool = True,
+    iters: int = 2,
+    interpret: bool | None = None,
+    **_ignored,
+) -> DataflowPlan:
+    """Upgrade a plan with a chunked-scan schedule **incrementally**: every
+    existing decision — forward rows, backward/mesh/decode/attention
+    sub-plans, and any scan schedule already tuned — is kept verbatim (a
+    migrated v1–v7 cache keeps dispatching bit-for-bit everywhere else),
+    and only the missing scan pieces (the prefill schedule, or just the
+    decode buckets a wider run added) are tuned."""
+    import dataclasses
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
+              iters=iters, interpret=interpret)
+    want = tuple(sorted(set(buckets or ())))
+    out = DataflowPlan(mesh=plan.mesh)
+    for l in plan.layers:
+        if l.name != SCAN_ANCHOR:
+            out.layers.append(l)
+            continue
+        sp = l.scan
+        if sp is None:
+            sp = _tune_scan(scan, want or None, **kw)
+        else:
+            have = dict(sp.decode or {})
+            missing = tuple(b for b in want if b not in have)
+            if missing:
+                have.update(_tune_scan_decode(scan, missing, **kw))
+                sp = dataclasses.replace(sp, decode=have)
+        out.layers.append(dataclasses.replace(l, scan=sp))
+    return out
+
+
 def model_gemms(cfg, tokens: int) -> list[GemmShape]:
     """The per-layer GEMMs an LM config issues for one batch of ``tokens``.
 
@@ -1235,6 +1592,33 @@ def model_attn_shape(cfg, tokens: int) -> AttnShape:
         kv_heads=cfg.num_kv_heads or cfg.num_heads,
         head_dim=cfg.head_dim,
     )
+
+
+def model_scan_shape(cfg, tokens: int) -> "ScanShape | None":
+    """The chunked-scan planning fingerprint an SSM/hybrid LM config issues
+    for one batch of ``tokens`` — the companion of ``model_attn_shape`` for
+    the ``SCAN_ANCHOR`` row's scan schedule.  None for families with no
+    recurrent mixer (pure attention)."""
+    fam = getattr(cfg, "family", "attn")
+    if fam == "hybrid":
+        return ScanShape(
+            batch=1,
+            seq=tokens,
+            heads=cfg.ssm_heads,
+            key_dim=cfg.ssm_state,
+            val_dim=cfg.ssm_head_dim,
+            post_update=True,
+        )
+    if fam == "ssm":
+        return ScanShape(
+            batch=1,
+            seq=tokens,
+            heads=cfg.rwkv_heads,
+            key_dim=cfg.rwkv_head_size,
+            val_dim=cfg.rwkv_head_size,
+            post_update=False,
+        )
+    return None
 
 
 def model_epilogues(cfg) -> dict[str, EpilogueSig]:

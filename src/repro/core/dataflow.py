@@ -459,6 +459,131 @@ def attn_traffic_bytes(shape: AttnShape, sweep: str, bq: int, bk: int,
     return KernelCost(hbm_bytes=hbm, mxu_flops=shape.flops, vmem_bytes=vmem)
 
 
+#: Tunable chunk lengths for the flex chunked-scan family.  Exp-safety bounds
+#: the ladder: every in-chunk exponent is within ``|LOG_DECAY_MIN| * chunk =
+#: 3 * chunk`` (models.ssm), so all candidates keep exp() arguments well
+#: inside f32 range (limit ~88).
+SCAN_CHUNK_CANDIDATES = (8, 16, 24)
+
+
+@dataclass(frozen=True)
+class ScanShape:
+    """Planning fingerprint of one chunked diagonal-decay scan (per layer
+    shape, like ``AttnShape`` for attention).  ``seq`` is the (padded)
+    token count per batch row, ``heads`` the recurrence head count,
+    ``key_dim``/``val_dim`` the (N, M) state slab sides.  ``post_update``
+    records the recurrence convention (True = Mamba2, False = RWKV) — it
+    changes the fused epilogue the kernel runs, so measured timings key on
+    it."""
+
+    batch: int
+    seq: int
+    heads: int
+    key_dim: int   # N: decay/state rows
+    val_dim: int   # M: value/state cols
+    post_update: bool = False
+    name: str = "ssm.scan"
+
+    @property
+    def bh(self) -> int:
+        """Folded (batch, head) kernel instances."""
+        return self.batch * self.heads
+
+    @property
+    def state_bytes(self) -> int:
+        """The full f32 state slab the "state" sweep pins in VMEM."""
+        return self.bh * self.key_dim * self.val_dim * 4
+
+    @property
+    def flops(self) -> int:
+        # per token: L-wide score row (N), output row (M), and the rank-1
+        # state update + inter-chunk read (2*N*M) — L taken at the default
+        # 16-chunk so the fingerprint doesn't depend on the tuned schedule
+        L = 16
+        per_tok = L * (self.key_dim + self.val_dim) + 2 * self.key_dim * self.val_dim
+        return 2 * self.bh * self.seq * per_tok
+
+    @property
+    def macs(self) -> int:
+        return self.flops // 2
+
+
+def scan_traffic_bytes(shape: ScanShape, sweep: str, chunk: int,
+                       in_bytes: int = 2, out_bytes: int = 2) -> KernelCost:
+    """HBM traffic + VMEM residency of one chunked-scan schedule.
+
+    Mirrors ``attn_traffic_bytes`` for the scan grid (C chunks outer x B*H
+    inner, one (L, .) tile set per step).  The r/k/v/log_w inputs and the o
+    output move exactly once under *both* sweeps (every block is visited
+    once); the sweeps differ only in how the running (N, M) f32 state
+    travels:
+
+      state-stationary: the whole ``bh*N*M`` f32 slab is a never-moving
+      output block — VMEM-resident across the grid, written once:
+          hbm  = streams + state_bytes
+          vmem = blocks + state_bytes
+      output-stationary: the state is a per-(b,h) block revisited
+      non-consecutively across the chunk axis, so it round-trips HBM every
+      chunk step (read-modify-write), and VMEM holds just one block:
+          hbm  = streams + 2 * C * state_bytes
+          vmem = blocks + 2 * N * M * 4
+
+    The state-stationary HBM win scales with C = seq/chunk; its VMEM cost
+    scales with ``batch*heads*N*M`` — which is exactly the paper's
+    shape-decides-the-dataflow argument transplanted to the scan: long
+    prefills at small batch want "state", large-batch prefills overflow the
+    96 MiB budget and fall back to "out".
+    """
+    if sweep not in ("state", "out"):
+        raise ValueError(f"unknown scan sweep {sweep!r}")
+    T, n, m = shape.seq, shape.key_dim, shape.val_dim
+    L = min(chunk, T)
+    C = _ceil_div(T, L)
+    # per-(b,h) sequential streams, each moved exactly once
+    rk_bytes = 2 * T * n * in_bytes          # r, k
+    lw_bytes = T * n * 4                     # log_w (f32)
+    v_bytes = T * m * in_bytes
+    o_bytes = T * m * out_bytes
+    streams = shape.bh * (rk_bytes + lw_bytes + v_bytes + o_bytes)
+    # one grid step's tile set (f32 compute copies + the (L, L) score tile)
+    blocks = (3 * L * n + L * m) * 4 + L * L * 4 + L * m * 4 + n * m * 4
+    if sweep == "state":
+        hbm = streams + shape.state_bytes
+        vmem = blocks + shape.state_bytes
+    else:
+        hbm = streams + 2 * C * shape.state_bytes
+        vmem = blocks + 2 * n * m * 4
+    return KernelCost(hbm_bytes=hbm, mxu_flops=shape.flops, vmem_bytes=vmem)
+
+
+def scan_decode_traffic_bytes(shape: ScanShape, kind: str, bucket: int,
+                              in_bytes: int = 2,
+                              out_bytes: int = 2) -> KernelCost:
+    """HBM traffic of one bucketed decode-scan step.
+
+    ``kind="fused"`` runs the single Pallas step kernel: state in + state
+    out, one HBM round trip.  ``kind="einsum"`` is the jnp recurrence,
+    which materializes the ``k v^T`` outer product as an HBM intermediate
+    between ops — an extra state-sized write + read (3x the state bytes).
+    The analytical gap makes "fused" the default pick; a measured run can
+    still override it per bucket.
+    """
+    if kind not in ("fused", "einsum"):
+        raise ValueError(f"unknown decode scan kind {kind!r}")
+    n, m = shape.key_dim, shape.val_dim
+    bh = bucket * shape.heads
+    state = bh * n * m * 4
+    io = bh * (3 * n * in_bytes + n * 4 + m * in_bytes + m * out_bytes)
+    flops = 2 * bh * (2 * n * m + n + m)
+    if kind == "fused":
+        hbm = io + 2 * state
+        vmem = io + 2 * state  # whole-problem blocks, no grid
+    else:
+        hbm = io + 3 * state + state  # + kv intermediate round trip
+        vmem = 2 * state
+    return KernelCost(hbm_bytes=hbm, mxu_flops=flops, vmem_bytes=vmem)
+
+
 def attn_decode_traffic_bytes(shape: AttnShape, kind: str, bucket: int,
                               cache_len: int | None = None,
                               block_size: int = 16,

@@ -45,11 +45,19 @@ Schema versions (see docs/autotune.md for the full JSON shape):
     ...}) picking the decode-attention kind the serve scheduler dispatches
     (see docs/autotune.md).  Null / absent = no attention schedule tuned;
     the jnp attention paths remain the dispatch, exactly the v6 behaviour.
+  * v8 — the ``lm_head`` anchor row may carry ``scan``: the chunked-scan
+    schedule ({sweep: "state"|"out", chunk, est_cost, source}) plus
+    per-bucket ``decode`` sub-rows (bucket -> {sweep: "fused"|"einsum",
+    chunk: 0, ...}) picking the decode-scan kind — the SSM/hybrid
+    analogue of the v7 attention schedule (see docs/autotune.md).  Null /
+    absent = no scan schedule tuned; the jnp chunked scan remains the
+    dispatch, exactly the v7 behaviour.
 
-Older files still **load and migrate**: v1–v6 files load with ``attention``
-None (v1–v5 also with ``decode`` None, v1–v4 with ``mesh`` None), so their
-dispatch is bit-for-bit what it was — the attention, decode-bucket and
-mesh axes only enter via incremental upgrades (``add_attention_subplans``
+Older files still **load and migrate**: v1–v7 files load with ``scan``
+None (v1–v6 also with ``attention`` None, v1–v5 with ``decode`` None,
+v1–v4 with ``mesh`` None), so their dispatch is bit-for-bit what it was —
+the scan, attention, decode-bucket and mesh axes only enter via
+incremental upgrades (``add_scan_subplans`` / ``add_attention_subplans``
 / ``add_decode_subplans`` / ``add_mesh_subplans``, which keep every
 existing decision verbatim) or a re-tune.  v1 rows are
 a strict subset (the
@@ -83,17 +91,19 @@ from .cmu import (
     TRANS_DW,
     AttnShape,
     DataflowPlan,
+    ScanShape,
     add_attention_subplans,
     add_bwd_subplans,
     add_decode_subplans,
     add_mesh_subplans,
+    add_scan_subplans,
     autotune_plan,
 )
 from .dist_dataflow import MeshSpec
 
-PLAN_CACHE_VERSION = 7
+PLAN_CACHE_VERSION = 8
 # older schemas this build can still read and migrate
-COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6, 7)
+COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6, 7, 8)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -154,10 +164,11 @@ def load_plan(path: str) -> DataflowPlan:
 
 def _migrate_rows(layers: list[dict], version: int) -> int:
     """In-place v1/v2/v3 row migration; returns migrated field count.
-    v4–v6 rows need no edits: v5, v6 and v7 only *add* optional fields
+    v4–v7 rows need no edits: v5 through v8 only *add* optional fields
     (the ``mesh`` sub-plan, the per-bucket ``decode`` sub-plans, and the
-    anchor row's ``attention`` schedule), which absent keys already decode
-    as None (single-device, unbucketed, jnp attention).
+    anchor rows' ``attention`` / ``scan`` schedules), which absent keys
+    already decode as None (single-device, unbucketed, jnp attention and
+    jnp chunked scan).
 
     v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
     the copy-based path minus the copy — their (dataflow, block) stays valid
@@ -195,7 +206,8 @@ def _migrate_rows(layers: list[dict], version: int) -> int:
 def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
                  mesh: MeshSpec | None = None,
                  buckets: tuple[int, ...] | None = None,
-                 attn: AttnShape | None = None) -> bool:
+                 attn: AttnShape | None = None,
+                 scan: ScanShape | None = None) -> bool:
     """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
     the guard against silently applying a cache tuned for another arch or
     batch geometry.  With ``require_bwd`` the plan must also carry backward
@@ -208,7 +220,9 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
     (the serving bar); a bucket-tuned plan still matches a bucketless
     request the same way.  With ``attn`` the anchor row must carry an
     attention schedule covering the requested buckets (the ``attn_pallas``
-    bar); an attention-tuned plan still matches a request without one."""
+    bar); an attention-tuned plan still matches a request without one.
+    ``scan`` applies the same bar to the chunked-scan schedule on the
+    ``SCAN_ANCHOR`` row (the ``ssm_pallas`` bar)."""
     planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
     wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
     if planned != wanted:
@@ -219,13 +233,16 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
         return False
     if attn is not None and not plan.has_attention(tuple(buckets or ())):
         return False
+    if scan is not None and not plan.has_scan(tuple(buckets or ())):
+        return False
     return plan.has_bwd() if require_bwd else True
 
 
 def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                      mesh: MeshSpec | None = None,
                      buckets: tuple[int, ...] | None = None,
-                     attn: AttnShape | None = None, **autotune_kw):
+                     attn: AttnShape | None = None,
+                     scan: ScanShape | None = None, **autotune_kw):
     """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
     matches ``gemms``, otherwise a fresh autotune persisted to ``path``
     (when given).  A cache tuned for different GEMM shapes (other arch,
@@ -243,11 +260,13 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     buckets) gains only the missing buckets (``add_decode_subplans``), and
     to ``attn``: a cache without an attention schedule (a migrated v1–v6
     file) gains it via ``add_attention_subplans`` with every GEMM, mesh
-    and decode decision kept verbatim."""
+    and decode decision kept verbatim, and to ``scan``: a cache without a
+    chunked-scan schedule (a migrated v1–v7 file) gains it via
+    ``add_scan_subplans`` the same way."""
     if path and os.path.exists(path):
         plan = load_plan(path)
         if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh,
-                        buckets=buckets, attn=attn):
+                        buckets=buckets, attn=attn, scan=scan):
             if autotune_kw.get("epilogue"):
                 import logging
 
@@ -298,13 +317,22 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                 )
                 plan = add_attention_subplans(plan, attn, tuple(buckets or ())
                                               or None, **autotune_kw)
+            if scan is not None and not plan.has_scan(tuple(buckets or ())):
+                log.warning(
+                    "plan cache %s lacks a chunked-scan schedule for %s; "
+                    "tuning the scan family only (keeping every existing "
+                    "decision)", path, scan,
+                )
+                plan = add_scan_subplans(plan, scan, tuple(buckets or ())
+                                         or None, **autotune_kw)
             save_plan(path, plan)
             return plan, False
         log.warning(
             "plan cache %s was tuned for different GEMM shapes; re-tuning", path
         )
     plan = autotune_plan(gemms, train=require_bwd, mesh=mesh,
-                         decode_buckets=buckets, attn=attn, **autotune_kw)
+                         decode_buckets=buckets, attn=attn, scan=scan,
+                         **autotune_kw)
     if path:
         save_plan(path, plan)
     return plan, False

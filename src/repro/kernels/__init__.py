@@ -9,6 +9,12 @@ from .flash_attention import (
     paged_attention,
     paged_attention_reference,
 )
+from .flex_scan import (
+    SCAN_DECODE_KINDS,
+    SCAN_SWEEPS,
+    flex_recurrent_step,
+    flex_scan,
+)
 from .flex_matmul import (
     ACTIVATIONS,
     DEFAULT_BLOCK,
@@ -27,6 +33,8 @@ __all__ = [
     "ATTN_DECODE_KINDS",
     "ATTN_SWEEPS",
     "DEFAULT_BLOCK",
+    "SCAN_DECODE_KINDS",
+    "SCAN_SWEEPS",
     "attention_ref",
     "auto_matmul",
     "blocked_matmul_ref",
@@ -36,6 +44,8 @@ __all__ = [
     "flex_linear",
     "flex_linear_sharded",
     "flex_matmul",
+    "flex_recurrent_step",
+    "flex_scan",
     "fused_matmul",
     "linear_ref",
     "matmul",

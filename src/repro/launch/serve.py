@@ -102,6 +102,11 @@ def main() -> None:
                     help="dispatch attention to the planned flex flash/"
                          "paged kernel family (prefill flash + per-bucket "
                          "Pallas paged decode)")
+    ap.add_argument("--ssm-pallas", action="store_true",
+                    help="dispatch the ssm/hybrid mixer scan to the planned "
+                         "flex chunked-scan kernel family (prefill chunked "
+                         "scan + per-bucket fused decode step); no-op on "
+                         "attention-only archs")
     ap.add_argument("--mesh", default="",
                     help="'DxM' data x model mesh (e.g. 2x4): serve "
                          "multi-device — projections run the shard_map-"
@@ -114,6 +119,8 @@ def main() -> None:
         cfg = cfg.replace(use_pallas=True)
     if args.attn_pallas:
         cfg = cfg.replace(attn_pallas=True)
+    if args.ssm_pallas:
+        cfg = cfg.replace(ssm_pallas=True)
     mesh = parse_mesh(args.mesh)
     if mesh is not None:
         from repro.models.sharding import use_rules

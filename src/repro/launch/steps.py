@@ -185,6 +185,13 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     mirroring the GEMM decode dict.  v1–v6 caches load with the attention
     row absent and are upgraded incrementally — every existing GEMM, mesh
     and decode decision survives verbatim.
+
+    When the config runs its recurrent mixer through the flex scan family
+    (``ssm_pallas``, for the ssm/hybrid families) the plan also carries a
+    **chunked-scan schedule** on the ``lm_head`` anchor row: state-residency
+    sweep + chunk length for prefill, plus per-bucket decode sub-plans
+    (fused Pallas step kernel vs jnp recurrence).  v1–v7 caches load with
+    the scan row absent and are upgraded the same incremental way.
     """
     if not path:
         return None
@@ -211,10 +218,15 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
         from repro.core import model_attn_shape
 
         attn = model_attn_shape(cfg, tokens)
+    scan = None
+    if getattr(cfg, "ssm_pallas", False):
+        from repro.core import model_scan_shape
+
+        scan = model_scan_shape(cfg, tokens)  # None for attention families
     plan, loaded = load_or_autotune(path, gemms, require_bwd=train,
                                     mesh=mesh_spec, measure=measure,
                                     buckets=decode_buckets, attn=attn,
-                                    epilogue=model_epilogues(cfg))
+                                    scan=scan, epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
     stripped = sum(
@@ -245,6 +257,14 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
             ap.sweep, ap.block[0], ap.block[1], ap.source,
             f", decode kinds {({b: s.sweep for b, s in sorted(ap.decode.items())})}"
             if ap.decode else "",
+        )
+    sp = plan.scan_plan() if scan is not None else None
+    if sp is not None:
+        logging.getLogger(__name__).info(
+            "scan schedule: %s-stationary chunk=%d (%s)%s",
+            sp.sweep, sp.chunk, sp.source,
+            f", decode kinds {({b: s.sweep for b, s in sorted(sp.decode.items())})}"
+            if sp.decode else "",
         )
     return plan
 

@@ -69,6 +69,8 @@ class ModelConfig:
     attn_unroll: bool = False       # unroll the chunk scan (exact HLO cost probes)
     attn_pallas: bool = False       # flash/paged attention via the planned
                                     # flex kernel family (forward/serve only)
+    ssm_pallas: bool = False        # chunked-scan / decode-step via the planned
+                                    # flex scan kernel family (ssm + hybrid)
 
     def __post_init__(self):
         if self.head_dim == 0:

@@ -31,6 +31,31 @@ LOG_DECAY_MIN = -3.0   # per-step decay floor exp(-3) ~ 0.05
 LA_CHUNK = 16          # intra-chunk exponent bound: |LOG_DECAY_MIN| * 16 = 48 < 88
 
 
+def rwkv_groupnorm_eps(cfg: ModelConfig) -> float:
+    """RWKV group-norm eps, derived from the head size.
+
+    Upstream RWKV uses ``eps = 1e-5 * head_size_divisor**2`` with
+    ``head_size_divisor = sqrt(head_size)`` (divisor 8 at the stock head
+    size 64 -> 64e-5), i.e. eps scales linearly with ``rwkv_head_size``.
+    """
+    return 1e-5 * cfg.rwkv_head_size
+
+
+def _pad_chunks(a: jax.Array, pad: int) -> jax.Array:
+    """Zero-pad the time axis of a (B, T, ...) operand to a chunk multiple.
+
+    Zero rows are exact no-ops for the scan: r = k = v = 0 keeps every pad
+    output zero (and prefill slices outputs to ``[:T]`` anyway), and
+    ``log_w = 0`` makes the pad steps decay the carried state by
+    ``exp(0) = 1`` with a zero k v^T update — so the final state is *bitwise*
+    invariant to ``T % chunk``.  (A historical ``where(lw == 0, -1e-6, lw)``
+    guard here was doubly dead: real decay rows are already clipped to
+    <= -1e-6, and it ran before the pad so pad rows kept log_w = 0 — which
+    is exactly the value that makes them safe.)
+    """
+    return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+
 def chunked_diag_linear_attn(
     r: jax.Array,       # (B, T, H, N)
     k: jax.Array,       # (B, T, H, N)
@@ -104,6 +129,67 @@ def chunked_diag_linear_attn(
     return o.astype(v.dtype), S
 
 
+def _scan_schedule() -> tuple[str, int]:
+    """The planned chunked-scan schedule ``(sweep, chunk)`` from the active
+    CMU plan's anchor row, or the default state-stationary ``LA_CHUNK`` when
+    no plan (or a pre-v8 plan) is active."""
+    from repro.core.plan_cache import active_plan
+
+    plan = active_plan()
+    sp = plan.scan_plan() if plan is not None else None
+    if sp is None or not sp.chunk:
+        return "state", LA_CHUNK
+    return sp.sweep, sp.chunk
+
+
+def _scan_decode_kind(batch: int) -> str:
+    """The planned decode-scan kind for a ``batch``-slot dispatch: the
+    bucketed sub-plan's pick, else "fused" (turning ``ssm_pallas`` on
+    without a plan runs the Pallas step kernel everywhere)."""
+    from repro.core.plan_cache import active_plan
+
+    plan = active_plan()
+    sp = plan.scan_plan() if plan is not None else None
+    sub = sp.decode_plan(batch) if sp is not None else None
+    return sub.sweep if sub is not None else "fused"
+
+
+def _chunked_scan(cfg, r, k, v, log_w, diag_scale=None, post_update=False):
+    """Prefill/train chunked scan with ragged-T padding: the flex Pallas
+    kernel family under the planned (sweep, chunk) when ``cfg.ssm_pallas``,
+    else the jnp reference at ``LA_CHUNK``.  Returns (o[:, :T], final_state);
+    zero pad rows leave both untouched (see ``_pad_chunks``)."""
+    T = r.shape[1]
+    if getattr(cfg, "ssm_pallas", False):
+        from repro.kernels.flex_scan import flex_scan
+
+        sweep, chunk = _scan_schedule()
+        pad = (-T) % chunk
+        if pad:
+            r, k, v, log_w = (_pad_chunks(a, pad) for a in (r, k, v, log_w))
+        o, S = flex_scan(r, k, v, log_w, diag_scale, chunk=chunk,
+                         sweep=sweep, post_update=post_update)
+    else:
+        pad = (-T) % LA_CHUNK
+        if pad:
+            r, k, v, log_w = (_pad_chunks(a, pad) for a in (r, k, v, log_w))
+        o, S = chunked_diag_linear_attn(r, k, v, log_w, diag_scale,
+                                        post_update=post_update)
+    return o[:, :T], S
+
+
+def _recurrent(cfg, r, k, v, log_w, S, diag_scale=None, post_update=False):
+    """One decode step: the fused Pallas kernel when ``cfg.ssm_pallas`` and
+    the bucketed sub-plan picks it, else the jnp recurrence."""
+    if getattr(cfg, "ssm_pallas", False) and _scan_decode_kind(r.shape[0]) == "fused":
+        from repro.kernels.flex_scan import flex_recurrent_step
+
+        return flex_recurrent_step(r, k, v, log_w, S, diag_scale,
+                                   post_update=post_update)
+    return recurrent_step(r, k, v, log_w, S, diag_scale,
+                          post_update=post_update)
+
+
 def recurrent_step(
     r: jax.Array,      # (B, H, N)
     k: jax.Array,
@@ -163,8 +249,14 @@ def mamba2(
     p: Params,
     x: jax.Array,
     state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
 ) -> tuple[jax.Array, dict[str, jax.Array] | None]:
-    """Mamba2 (SSD) block. x: (B, T, D). state for decode: {conv, ssm}."""
+    """Mamba2 (SSD) block. x: (B, T, D). state for decode: {conv, ssm}.
+
+    ``return_state=True`` makes a stateless (prefill) call also return the
+    final {conv, ssm} state — the chunked scan computes it anyway, so prefill
+    state capture costs nothing extra (it used to re-run the whole layer).
+    """
     B, T, D = x.shape
     Di, N, Hn, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
@@ -190,19 +282,10 @@ def mamba2(
     v = constrain(v, "act_batch", None, "act_heads", None)
 
     if state is None:  # train / prefill: chunked parallel form
-        pad = (-T) % LA_CHUNK
-        if pad:
-            padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
-            o, ssm_state = chunked_diag_linear_attn(
-                padf(r), padf(k), padf(v), padf(jnp.where(lw == 0, -1e-6, lw)),
-                post_update=True,
-            )
-            o = o[:, :T]
-        else:
-            o, ssm_state = chunked_diag_linear_attn(r, k, v, lw, post_update=True)
+        o, ssm_state = _chunked_scan(cfg, r, k, v, lw, post_update=True)
     else:  # decode: exact recurrence
-        o, ssm_state = recurrent_step(
-            r[:, 0], k[:, 0], v[:, 0], lw[:, 0], state["ssm"], post_update=True
+        o, ssm_state = _recurrent(
+            cfg, r[:, 0], k[:, 0], v[:, 0], lw[:, 0], state["ssm"], post_update=True
         )
         o = o[:, None]
 
@@ -210,7 +293,12 @@ def mamba2(
     o = rmsnorm(o * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
     o = constrain(o, "act_batch", None, "act_heads")
     out = jnp.einsum("bte,ed->btd", o, p["out_proj"].astype(x.dtype))
-    new_state = None if state is None else {"conv": conv_state, "ssm": ssm_state}
+    if state is None and not return_state:
+        new_state = None
+    elif state is None:  # prefill capture: f32 carry for the decode scan
+        new_state = {"conv": conv_state.astype(jnp.float32), "ssm": ssm_state}
+    else:
+        new_state = {"conv": conv_state, "ssm": ssm_state}
     return out, new_state
 
 
@@ -263,7 +351,11 @@ def _token_shift(x: jax.Array, last: jax.Array | None):
 def rwkv6_time_mix(
     cfg: ModelConfig, p: Params, x: jax.Array,
     state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
 ):
+    """RWKV-6 time mix.  ``return_state=True`` makes a stateless (prefill)
+    call also return the final {shift_t, wkv} state the chunked scan already
+    computes — prefill no longer needs its own copy of this function."""
     B, T, D = x.shape
     Hn, Hs = cfg.rwkv_heads, cfg.rwkv_head_size
     prev = _token_shift(x, None if state is None else state["shift_t"])
@@ -292,18 +384,10 @@ def rwkv6_time_mix(
     log_w = jnp.clip(log_w, LOG_DECAY_MIN, -1e-6).reshape(B, T, Hn, Hs)
 
     if state is None:
-        pad = (-T) % LA_CHUNK
-        if pad:
-            padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
-            o, wkv_state = chunked_diag_linear_attn(
-                padf(r), padf(k), padf(v), padf(jnp.where(log_w == 0, -1e-6, log_w)), p["u"]
-            )
-            o = o[:, :T]
-        else:
-            o, wkv_state = chunked_diag_linear_attn(r, k, v, log_w, p["u"])
+        o, wkv_state = _chunked_scan(cfg, r, k, v, log_w, p["u"])
     else:
-        o, wkv_state = recurrent_step(
-            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state["wkv"], diag_scale=p["u"]
+        o, wkv_state = _recurrent(
+            cfg, r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state["wkv"], diag_scale=p["u"]
         )
         o = o[:, None]
 
@@ -312,16 +396,21 @@ def rwkv6_time_mix(
     o = o.reshape(B, T, Hn, Hs)
     mu = o.mean(-1, keepdims=True)
     var = ((o - mu) ** 2).mean(-1, keepdims=True)
-    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, T, D) * p["ln_x_scale"].astype(x.dtype)
+    eps = rwkv_groupnorm_eps(cfg)
+    o = ((o - mu) * jax.lax.rsqrt(var + eps)).reshape(B, T, D) * p["ln_x_scale"].astype(x.dtype)
     o = o * jax.nn.silu(g)
     out = jnp.einsum("btd,de->bte", o, p["out_proj"].astype(x.dtype))
-    new_state = None if state is None else {"shift_t": x[:, -1], "wkv": wkv_state}
+    if state is None and not return_state:
+        new_state = None
+    else:
+        new_state = {"shift_t": x[:, -1].astype(jnp.float32), "wkv": wkv_state}
     return out, new_state
 
 
 def rwkv6_channel_mix(
     cfg: ModelConfig, p: Params, x: jax.Array,
     state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
 ):
     prev = _token_shift(x, None if state is None else state["shift_c"])
     mix = p["mix_c"].astype(x.dtype)
@@ -332,7 +421,10 @@ def rwkv6_channel_mix(
     vv = jnp.einsum("btf,fd->btd", kk, p["cv"].astype(x.dtype))
     rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cr"].astype(x.dtype)))
     out = rr * vv
-    new_state = None if state is None else {"shift_c": x[:, -1]}
+    if state is None and not return_state:
+        new_state = None
+    else:
+        new_state = {"shift_c": x[:, -1].astype(jnp.float32)}
     return out, new_state
 
 

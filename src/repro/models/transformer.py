@@ -461,44 +461,18 @@ class Model:
 
         def body(carry, lp):
             x, = carry
+            # the exact block-forward op sequence — ``return_state=True``
+            # captures the final {shift, wkv} states the chunked scan already
+            # computes, so prefill logits stay bitwise equal to ``forward``
+            # (this used to be a 40-line drift-prone copy of the time mix)
             h = Lyr.norm(cfg, lp["ln1"], x)
-            B, T, D = h.shape
-            # time mix, capturing final wkv state
-            prev = S._token_shift(h, None)
-            mix = lp["tmix"]["mix"].astype(h.dtype)
-            r = jnp.einsum("btd,de->bte", h + (prev - h) * mix[0], lp["tmix"]["r_proj"].astype(h.dtype))
-            k = jnp.einsum("btd,de->bte", h + (prev - h) * mix[1], lp["tmix"]["k_proj"].astype(h.dtype))
-            v = jnp.einsum("btd,de->bte", h + (prev - h) * mix[2], lp["tmix"]["v_proj"].astype(h.dtype))
-            g = jnp.einsum("btd,de->bte", h + (prev - h) * mix[3], lp["tmix"]["g_proj"].astype(h.dtype))
-            Hn, Hs = cfg.rwkv_heads, cfg.rwkv_head_size
-            xw = h + (prev - h) * lp["tmix"]["mix_w"].astype(h.dtype)
-            dd = jnp.einsum(
-                "btr,rd->btd",
-                jnp.tanh(jnp.einsum("btd,dr->btr", xw, lp["tmix"]["dw1"].astype(h.dtype))),
-                lp["tmix"]["dw2"].astype(h.dtype),
-            )
-            log_w = -jnp.exp(jnp.clip(lp["tmix"]["w0"].astype(jnp.float32) + dd.astype(jnp.float32), -10.0, 1.0))
-            log_w = jnp.clip(log_w, S.LOG_DECAY_MIN, -1e-6).reshape(B, T, Hn, Hs)
-            rr, kk, vv = (a.reshape(B, T, Hn, Hs) for a in (r, k, v))
-            pad = (-T) % S.LA_CHUNK
-            if pad:
-                pf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
-                o, wkv = S.chunked_diag_linear_attn(pf(rr), pf(kk), pf(vv), pf(jnp.where(log_w == 0, -1e-6, log_w)), lp["tmix"]["u"])
-                o = o[:, :T]
-            else:
-                o, wkv = S.chunked_diag_linear_attn(rr, kk, vv, log_w, lp["tmix"]["u"])
-            o = o.reshape(B, T, Hn, Hs)
-            mu = o.mean(-1, keepdims=True)
-            var = ((o - mu) ** 2).mean(-1, keepdims=True)
-            o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, T, D) * lp["tmix"]["ln_x_scale"].astype(h.dtype)
-            o = o * jax.nn.silu(g)
-            x = x + jnp.einsum("btd,de->bte", o, lp["tmix"]["out_proj"].astype(h.dtype))
-            shift_t = h[:, -1].astype(jnp.float32)
+            to, st1 = S.rwkv6_time_mix(cfg, lp["tmix"], h, return_state=True)
+            x = x + to
             h2 = Lyr.norm(cfg, lp["ln2"], x)
-            co, _ = S.rwkv6_channel_mix(cfg, lp["tmix"], h2)
+            co, st2 = S.rwkv6_channel_mix(cfg, lp["tmix"], h2, return_state=True)
             x = x + co
             x = constrain(x, "act_batch", "act_seq", "act_embed")
-            return (x,), {"shift_t": shift_t, "shift_c": h2[:, -1].astype(jnp.float32), "wkv": wkv}
+            return (x,), {**st1, **st2}
 
         (h,), states = self._scan(body, (self._embed(params, batch["tokens"]),), params["layers"])
         logits = self._logits(params, h)
@@ -519,10 +493,10 @@ class Model:
             lp, flag, slot = inp
             h = Lyr.norm(cfg, lp["ln1"], x)
             B, T, D = h.shape
-            # mamba with state capture
-            ho, st = S.mamba2(cfg, lp["mamba"], h, state=None)
-            # recompute final ssm state via a stateful pass over the last chunk is
-            # complex; instead run chunked form which returns it:
+            # one mamba pass per layer: the chunked scan's final state comes
+            # back through ``return_state`` (this used to re-run the whole
+            # layer a second time just to recompute it)
+            ho, st = S.mamba2(cfg, lp["mamba"], h, return_state=True)
             x = x + ho
 
             def with_attn(args):
@@ -540,7 +514,7 @@ class Model:
 
             x, kv_k, kv_v = jax.lax.cond(flag, with_attn, lambda a: a, (x, kv_k, kv_v))
             x = constrain(x, "act_batch", "act_seq", "act_embed")
-            return (x, kv_k, kv_v), _mamba_final_state(cfg, lp["mamba"], h)
+            return (x, kv_k, kv_v), st
 
         (h, kv_k, kv_v), mstates = self._scan(
             body, (x, kv["k"], kv["v"]), (params["layers"], flags, slots)
@@ -632,8 +606,7 @@ class Model:
                 h2 = Lyr.norm(cfg, lp["ln2"], x)
                 co, st2 = S.rwkv6_channel_mix(cfg, lp["tmix"], h2, state={"shift_c": st["shift_c"]})
                 x = x + co
-                new = {"shift_t": h[:, -1].astype(jnp.float32), "shift_c": h2[:, -1].astype(jnp.float32), "wkv": st1["wkv"]}
-                return (x,), new
+                return (x,), {**st1, **st2}
 
             (x,), states = self._scan(body, (x,), (params["layers"], cache["states"]))
             logits = self._logits(params, x)[:, 0]
@@ -751,30 +724,3 @@ class Model:
             gbody, (x, pools["k"], pools["v"]), (gp, jnp.arange(groups)))
         logits = self._logits(params, x)[:, 0]
         return logits, {"k": nk, "v": nv}
-
-
-def _mamba_final_state(cfg: ModelConfig, p: Params, h: jax.Array):
-    """Final (conv, ssm) state of a mamba2 layer for a prefill pass."""
-    B, T, _ = h.shape
-    Di, N = cfg.ssm_inner, cfg.ssm_state
-    zxbcdt = jnp.einsum("btd,de->bte", h, p["in_proj"].astype(h.dtype))
-    z, xin, Bm, Cm, dt = jnp.split(zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
-    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
-    conv_out, conv_state = S._causal_conv1d(conv_in, p["conv_w"].astype(h.dtype), p["conv_b"].astype(h.dtype))
-    xin, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    log_w = jnp.clip(-dt * jnp.exp(p["A_log"]), S.LOG_DECAY_MIN, -1e-6)
-    Hn, P = cfg.ssm_heads, cfg.ssm_head_dim
-    v = (xin * dt.repeat(P, axis=-1).astype(xin.dtype)).reshape(B, T, Hn, P)
-    r = jnp.broadcast_to(Cm[:, :, None, :], (B, T, Hn, N))
-    k = jnp.broadcast_to(Bm[:, :, None, :], (B, T, Hn, N))
-    lw = jnp.broadcast_to(log_w[..., None], (B, T, Hn, N))
-    pad = (-T) % S.LA_CHUNK
-    if pad:
-        pf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
-        _, ssm_state = S.chunked_diag_linear_attn(
-            pf(r), pf(k), pf(v), pf(jnp.where(lw == 0, -1e-6, lw)), post_update=True
-        )
-    else:
-        _, ssm_state = S.chunked_diag_linear_attn(r, k, v, lw, post_update=True)
-    return {"conv": conv_state.astype(jnp.float32), "ssm": ssm_state}

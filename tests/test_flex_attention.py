@@ -337,7 +337,7 @@ def test_v6_cache_loads_with_attention_none_and_upgrades(tmp_path):
                 lp.mesh, lp.decode) == before[lp.name], \
             f"incremental attention upgrade retuned {lp.name}"
     with open(path) as f:
-        assert json.load(f)["version"] == 7
+        assert json.load(f)["version"] == 8
     again, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
                                      attn=attn, measure=False)
     assert loaded  # second launch reloads, no tuning
