@@ -97,6 +97,62 @@ def run_continuous(model, params, trace, args):
     }
 
 
+def run_faulted(model, params, trace, args, clean_results):
+    """Goodput under injected faults: the same trace replayed through a
+    seeded ``FaultPlan``.  Goodput counts only *completed* tokens; the
+    run must not crash, every request must end terminal, every completed
+    stream must stay bitwise identical to the clean replay, and the KV
+    allocator must be fully restored."""
+    from repro.launch.scheduler import ServeScheduler
+    from repro.runtime.fault_injection import FaultPlan
+
+    faults = FaultPlan.from_spec(args.faults, seed=args.seed)
+
+    def once():
+        faults.reset()
+        sched = ServeScheduler(
+            model, params, capacity=args.slots, block_size=args.block_size,
+            max_total_len=args.max_prompt + args.max_gen,
+            deadline=args.deadline or None, faults=faults)
+        t0 = time.perf_counter()
+        results, stats = sched.run(trace)
+        return results, stats, time.perf_counter() - t0, sched
+
+    once()  # warm-up (poison signature adds one jit variant)
+    results, stats, wall, sched = once()
+
+    assert set(results) == {r.rid for r in trace}, "a request vanished"
+    alloc = sched.kv.allocator
+    assert alloc.live_blocks == 0, f"{alloc.live_blocks} KV blocks leaked"
+    statuses: dict[str, int] = {}
+    completed_tokens = 0
+    match = True
+    for r in trace:
+        out = results[r.rid]
+        statuses[out.status.value] = statuses.get(out.status.value, 0) + 1
+        if out.status.completed:
+            completed_tokens += len(out.tokens)
+            match &= bool(np.array_equal(out.tokens,
+                                         clean_results[r.rid].tokens))
+    assert match, "a completed stream diverged from the clean replay"
+    return {
+        "spec": args.faults,
+        "walltime_s": wall,
+        "requests": len(trace),
+        "completed": sum(1 for r in results.values() if r.status.completed),
+        "completed_tokens": completed_tokens,
+        "emitted_tokens": stats.tokens,  # includes replayed + truncated work
+        "goodput_tokens_per_s": completed_tokens / max(wall, 1e-9),
+        "throughput_tokens_per_s": stats.tokens / max(wall, 1e-9),
+        "statuses": statuses,
+        "preemptions": stats.preemptions,
+        "replays": stats.replays,
+        "faults_injected": stats.faults_injected,
+        "streams_match_clean": match,
+        "crashes": 0,  # reaching this line is the proof
+    }
+
+
 def run_fixed(model, params, trace):
     from repro.launch.scheduler import run_fixed_batch
 
@@ -187,6 +243,32 @@ def dry_run(args) -> None:
             f"req{r.rid} diverges from sequential decode"
     print(f"invariants OK: {len(trace)} requests finished, allocator "
           f"restored, streams identical to per-request sequential decode")
+
+    # the fault-degradation contract on the same trace: injected alloc
+    # failures + preemptions — no crash, every request terminal, every
+    # completed stream still bitwise equal to the sequential reference
+    from repro.runtime.fault_injection import FaultPlan
+
+    faults = FaultPlan(seed=args.seed, alloc_fail=0.3, preempt=0.05)
+    fsched = ServeScheduler(model, params, capacity=slots,
+                            block_size=args.block_size, max_total_len=12 + 6,
+                            faults=faults)
+    fresults, fstats = fsched.run(trace)
+    assert set(fresults) == {r.rid for r in trace}, "a request vanished"
+    assert fsched.kv.allocator.live_blocks == 0, "KV blocks leaked"
+    assert faults.total_injected >= 1, "the fault plan never fired"
+    completed = 0
+    for r in trace:
+        out = fresults[r.rid]
+        if out.status.completed:
+            completed += 1
+            assert np.array_equal(out.tokens, ref[r.rid]), \
+                f"req{r.rid} diverges from sequential decode under faults"
+    assert completed >= 1
+    print(f"fault degradation OK: {completed}/{len(trace)} completed under "
+          f"{faults.describe()} (injected {fstats.faults_injected}, "
+          f"preemptions {fstats.preemptions}), completed streams bitwise "
+          f"identical, allocator restored")
     print("dry-run OK")
 
 
@@ -205,9 +287,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the full benchmark record as JSON")
+    ap.add_argument("--faults", default="",
+                    help="also measure goodput under this injected fault "
+                         "spec (runtime/fault_injection.py), e.g. "
+                         "'alloc=0.05,nan=0.005,preempt=0.02,latency=0.02'")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="queue-wait TTL in decode steps for the faulted "
+                         "replay (0 = none)")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny workload, invariants + bucket-plan dispatch "
-                         "asserted, no timing (CI smoke)")
+                         "+ fault-degradation contract asserted, no timing "
+                         "(CI smoke)")
     args = ap.parse_args()
 
     if args.dry_run:
@@ -227,7 +317,7 @@ def main() -> None:
           f"{gens[0]}..{gens[-1]} (median {gens[len(gens) // 2]}), "
           f"arrival rate {args.rate}/step")
 
-    _, cont = run_continuous(model, params, trace, args)
+    clean_results, cont = run_continuous(model, params, trace, args)
     lat = cont["latency_per_token_s"]
     print(f"continuous: {cont['tokens']} tok in {cont['walltime_s']*1e3:.0f} ms "
           f"= {cont['tokens_per_s']:,.0f} tok/s | {cont['decode_steps']} steps, "
@@ -243,6 +333,16 @@ def main() -> None:
 
     speedup = cont["tokens_per_s"] / max(fixed["tokens_per_s"], 1e-9)
     print(f"continuous / fixed tokens/s: {speedup:.2f}x")
+
+    faulted = None
+    if args.faults:
+        faulted = run_faulted(model, params, trace, args, clean_results)
+        print(f"faulted ({faulted['spec']}): "
+              f"{faulted['completed']}/{faulted['requests']} completed, "
+              f"goodput {faulted['goodput_tokens_per_s']:,.0f} tok/s "
+              f"({faulted['goodput_tokens_per_s']/max(cont['tokens_per_s'], 1e-9):.2f}x clean) | "
+              f"statuses {faulted['statuses']}, "
+              f"injected {faulted['faults_injected']}")
 
     if args.json:
         record = {
@@ -266,6 +366,8 @@ def main() -> None:
             "fixed_batch": fixed,
             "speedup_tokens_per_s": speedup,
         }
+        if faulted is not None:
+            record["faulted"] = faulted
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
         print(f"wrote {args.json}")

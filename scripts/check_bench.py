@@ -112,6 +112,13 @@ SERVE_SCHEMA = Schema({
                                            "mean": positive}},
     "fixed_batch": {**_LANE, "row_steps": positive},
     "speedup_tokens_per_s": positive,
+    "faulted": {"spec": str, "walltime_s": positive, "requests": positive,
+                "completed": int, "completed_tokens": int,
+                "emitted_tokens": int, "goodput_tokens_per_s": positive,
+                "throughput_tokens_per_s": positive, "statuses": dict,
+                "preemptions": int, "replays": int,
+                "faults_injected": dict, "streams_match_clean": bool,
+                "crashes": int},
 })
 
 
@@ -134,6 +141,40 @@ def extra_serve_checks(rec) -> list[str]:
         errors.append(
             f"bucket histogram {sorted(buckets)} exceeds slot capacity "
             f"{rec['config']['slots']}")
+    ft = rec["faulted"]
+    if ft["crashes"] != 0:
+        errors.append(f"faulted.crashes is {ft['crashes']} — the scheduler "
+                      "must degrade, never crash")
+    if not ft["streams_match_clean"]:
+        errors.append("faulted: a completed stream diverged from the clean "
+                      "replay — preempt-and-replay determinism broken")
+    # goodput <= clean, stated structurally (token counts / same-run rates)
+    # rather than as cross-run wall-clock, which CPU timing noise can flip:
+    # faults can only lose completed work, and replayed/truncated work is
+    # never goodput.
+    if ft["completed_tokens"] > cont["tokens"]:
+        errors.append(
+            f"faulted completed {ft['completed_tokens']} tokens but the "
+            f"clean run only has {cont['tokens']} — injected faults cannot "
+            "create completed work")
+    if ft["goodput_tokens_per_s"] > ft["throughput_tokens_per_s"]:
+        errors.append(
+            "faulted goodput exceeds the same run's total throughput — "
+            "replayed/failed work counted as goodput")
+    if ft["completed_tokens"] > ft["emitted_tokens"]:
+        errors.append(
+            f"faulted: {ft['completed_tokens']} completed tokens exceed the "
+            f"{ft['emitted_tokens']} emitted — accounting is wrong")
+    if sum(ft["statuses"].values()) != ft["requests"]:
+        errors.append(
+            f"faulted.statuses {ft['statuses']} does not account for every "
+            f"request ({ft['requests']})")
+    if ft["completed"] < 1:
+        errors.append("faulted: nothing completed — degradation is total")
+    if ft["replays"] > ft["preemptions"]:
+        errors.append(
+            f"faulted: {ft['replays']} replays exceed {ft['preemptions']} "
+            "preemptions (each replay must follow a preemption)")
     return errors
 
 

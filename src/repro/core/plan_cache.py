@@ -78,7 +78,11 @@ sub-plans,
 passes ``require_bwd=True`` to ``load_or_autotune`` and a fwd-only cache
 is then re-tuned and overwritten, never silently half-applied.  Files
 from a *newer* schema than this build understands are rejected with a
-clear re-tune message.
+clear re-tune message by ``load_plan``; ``load_or_autotune`` (the server
+entry point) goes one step further and treats any unreadable file —
+corrupt/truncated JSON or a future schema — as a degraded launch, not a
+fatal one: the file is quarantined to ``<path>.corrupt`` and the run
+falls back to a fresh re-tune (with a warning).
 """
 
 from __future__ import annotations
@@ -262,9 +266,31 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     file) gains it via ``add_attention_subplans`` with every GEMM, mesh
     and decode decision kept verbatim, and to ``scan``: a cache without a
     chunked-scan schedule (a migrated v1–v7 file) gains it via
-    ``add_scan_subplans`` the same way."""
+    ``add_scan_subplans`` the same way.
+
+    Server-grade load hardening: a corrupt/truncated cache file, or one
+    written by a *newer* build (a future schema version), must not kill the
+    launch.  ``load_plan``'s ``ValueError`` is caught here, the offending
+    file is **quarantined** (renamed to ``<path>.corrupt`` so the evidence
+    survives for debugging and the next launch doesn't trip on it again),
+    and the run falls back to a fresh re-tune persisted to ``path``."""
     if path and os.path.exists(path):
-        plan = load_plan(path)
+        try:
+            plan = load_plan(path)
+        except ValueError as e:
+            import logging
+
+            quarantine = path + ".corrupt"
+            os.replace(path, quarantine)
+            logging.getLogger(__name__).warning(
+                "plan cache %s is unreadable (%s); quarantined to %s and "
+                "re-tuning", path, e, quarantine,
+            )
+            plan = autotune_plan(gemms, train=require_bwd, mesh=mesh,
+                                 decode_buckets=buckets, attn=attn, scan=scan,
+                                 **autotune_kw)
+            save_plan(path, plan)
+            return plan, False
         if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh,
                         buckets=buckets, attn=attn, scan=scan):
             if autotune_kw.get("epilogue"):

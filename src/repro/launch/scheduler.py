@@ -37,16 +37,39 @@ is masked — contribute exact-zero attention instead of a uniform
 distribution over garbage.  ``tests/test_serving.py`` pins stream-vs-
 sequential token equality per bucket with the Pallas path enabled.
 
+Fault model (the robustness layer; see docs/serving.md): every request
+ends in a terminal ``RequestStatus`` and no failure mode crashes the
+trace.  An inadmissible request is **rejected** per-request; queue
+overflow (``max_queue``) load-sheds the newest arrival; a request still
+queued past its TTL (``deadline``) **times out**; a slot whose decode
+logits go non-finite **fails** alone — its stream is truncated at the
+poisoned step, its neighbours' streams stay bitwise unchanged.  Pool
+starvation (organic or injected) **preempts-and-replays**: the victim's
+blocks are freed and the request re-queued carrying its generated-so-far
+tokens; on re-admission ``prompt + generated`` replays through prefill,
+and because greedy decode is a pure function of the prefix the resumed
+stream is bitwise identical to the uninterrupted run
+(``RequestStatus.PREEMPTED_RESUMED``).  ``runtime.fault_injection`` makes
+every one of those paths deterministically schedulable;
+``tests/test_fault_serving.py`` sweeps randomized fault schedules and
+pins the replay-determinism property.
+
 Host/device sync discipline: tokens live in a device-resident slot array
 and are folded back with lazy ``.at[].set``; the loop never calls
 ``np.asarray`` per step (the old loop's per-step host sync).  The only
-blocking syncs are at admission/eviction events — where the host must
-inspect schedule state anyway — and each one timestamps the event stream
-that ``benchmarks/serve_bench.py`` turns into per-token latencies.
+blocking syncs are at admission/eviction/preemption events — where the
+host must inspect schedule state anyway — and each one timestamps the
+event stream that ``benchmarks/serve_bench.py`` turns into per-token
+latencies.  The non-finite-logit guard rides the same discipline: decode
+emits a per-row finiteness flag that accumulates device-side next to the
+tokens and is inspected only at the end-of-run drain (injected poison is
+additionally evicted eagerly, since the host scheduled it and needs no
+readback to know).
 """
 
 from __future__ import annotations
 
+import enum
 import logging
 import time
 from collections import deque
@@ -58,9 +81,31 @@ import numpy as np
 
 from repro.core.cmu import DECODE_BUCKETS
 from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.runtime.fault_injection import FaultPlan
 from repro.runtime.kv_cache import PagedKVCache
 
 log = logging.getLogger(__name__)
+
+# Consecutive empty-slot-table admission retries under injected allocation
+# faults before the scheduler sheds the head request instead of spinning.
+STARVATION_RETRY_LIMIT = 1024
+
+
+class RequestStatus(enum.Enum):
+    """Terminal state of a served request.  Every request a trace hands to
+    ``ServeScheduler.run`` ends in exactly one of these — the scheduler
+    never raises for a per-request condition."""
+
+    OK = "ok"                              # completed, never disturbed
+    REJECTED = "rejected"                  # inadmissible or load-shed
+    TIMEOUT = "timeout"                    # queue-wait TTL exceeded
+    PREEMPTED_RESUMED = "preempted_resumed"  # completed after >=1 replay
+    FAILED = "failed"                      # non-finite logits / no progress
+
+    @property
+    def completed(self) -> bool:
+        """True when the request finished with its full token stream."""
+        return self in (RequestStatus.OK, RequestStatus.PREEMPTED_RESUMED)
 
 
 @dataclass
@@ -69,20 +114,25 @@ class Request:
 
     ``arrival`` is a virtual timestamp in decode-step units — the scheduler
     admits a request only once its arrival step has passed, which is how
-    the benchmark replays a Poisson trace without wall-clock sleeps."""
+    the benchmark replays a Poisson trace without wall-clock sleeps.
+    ``deadline`` (steps, from arrival) bounds the queue wait for this
+    request alone; None defers to the scheduler-wide TTL."""
 
     rid: int
     prompt: np.ndarray
     max_new: int
     arrival: int = 0
+    deadline: int | None = None
 
 
 @dataclass
 class RequestResult:
     rid: int
     tokens: np.ndarray | None  # filled by the end-of-run drain
-    admitted_step: int
-    finished_step: int
+    admitted_step: int         # first admission (-1 if never admitted)
+    finished_step: int         # terminal step (-1 if rejected up front)
+    status: RequestStatus = RequestStatus.OK
+    preemptions: int = 0
 
 
 @dataclass
@@ -91,6 +141,12 @@ class ServeStats:
     steps: int = 0
     prefills: int = 0
     tokens: int = 0
+    preemptions: int = 0
+    replays: int = 0
+    rejections: int = 0
+    timeouts: int = 0
+    failures: int = 0
+    faults_injected: dict[str, int] = field(default_factory=dict)
     active_per_step: list[int] = field(default_factory=list)
     bucket_per_step: list[int] = field(default_factory=list)
     # (decode steps so far, tokens so far, perf_counter) at every sync event
@@ -113,7 +169,7 @@ class ServeStats:
 class _Slot:
     rid: int
     pos: int        # next cache write position = tokens already cached
-    remaining: int  # decode steps left
+    remaining: int  # decode steps left (this incarnation)
     blocks: list[int]
     admitted_step: int
 
@@ -129,7 +185,14 @@ def _jit_steps(model):
     """Jitted (greedy prefill, greedy decode) paged steps, cached on the
     model: every ``ServeScheduler`` for the same model shares one jit cache,
     so a fresh scheduler (the benchmark builds several) never recompiles
-    already-traced (prompt-bucket, batch-bucket) signatures."""
+    already-traced (prompt-bucket, batch-bucket) signatures.
+
+    Both steps emit a per-row **finiteness flag** next to the sampled token
+    (the non-finite-logit guard's observable), and decode takes a per-row
+    ``poison`` mask — the fault-injection seam that overwrites a row's
+    logits with NaN *inside* the step.  With the mask all-False the logits
+    pass through ``where`` untouched, so the determinism contract is
+    bitwise intact on the clean path."""
     cached = getattr(model, "_paged_jit_steps", None)
     if cached is not None:
         return cached
@@ -138,11 +201,14 @@ def _jit_steps(model):
 
     def prefill_fn(params, tokens, lens, table, pool_k, pool_v):
         last, pk, pv = pf(params, {"tokens": tokens}, lens, table, pool_k, pool_v)
-        return jnp.argmax(last, -1).astype(jnp.int32), pk, pv
+        ok = jnp.isfinite(last.astype(jnp.float32)).all(-1)
+        return jnp.argmax(last, -1).astype(jnp.int32), ok, pk, pv
 
-    def decode_fn(params, pool_k, pool_v, table, positions, token):
+    def decode_fn(params, pool_k, pool_v, table, positions, token, poison):
         logits, pk, pv = dc(params, pool_k, pool_v, table, positions, token)
-        return jnp.argmax(logits, -1).astype(jnp.int32), pk, pv
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
+        ok = jnp.isfinite(logits.astype(jnp.float32)).all(-1)
+        return jnp.argmax(logits, -1).astype(jnp.int32), ok, pk, pv
 
     steps = (jax.jit(prefill_fn, donate_argnums=(4, 5)),
              jax.jit(decode_fn, donate_argnums=(1, 2)))
@@ -181,12 +247,25 @@ class ServeScheduler:
     ``capacity`` slots; each admitted request gets its blocks for
     ``prompt + max_new - 1`` cache positions up front (no mid-flight OOM),
     a queue position otherwise.  ``run(requests)`` replays a trace and
-    returns ``({rid: RequestResult}, ServeStats)``.
+    returns ``({rid: RequestResult}, ServeStats)`` with every request in a
+    terminal ``RequestStatus`` — per-request failures degrade, they never
+    crash the trace.
+
+    Robustness knobs: ``deadline`` is the queue-wait TTL in decode steps
+    (a request still waiting ``deadline`` steps after arrival times out;
+    preempted requests re-enter the queue with a fresh arrival),
+    ``max_queue`` bounds the waiting queue (the newest arrival is load-shed
+    when it would overflow), and ``faults`` threads a deterministic
+    ``runtime.fault_injection.FaultPlan`` through the scheduler's fault
+    seams (allocation, decode logits, preemption, latency).
     """
 
     def __init__(self, model, params, *, capacity: int = 8,
                  block_size: int = 16, max_total_len: int,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None,
+                 deadline: int | None = None,
+                 max_queue: int | None = None,
+                 faults: FaultPlan | None = None):
         cfg = model.cfg
         if cfg.family not in ("dense", "moe", "vlm"):
             raise NotImplementedError(
@@ -195,12 +274,17 @@ class ServeScheduler:
         self.params = params
         self.capacity = capacity
         self.block_size = block_size
+        self.deadline = deadline
+        self.max_queue = max_queue
+        self.faults = faults
         self.buckets = serve_buckets(capacity)
         # table width: blocks for the longest admissible request
         self.max_blocks = -(-max_total_len // block_size)
         if num_blocks is None:
             num_blocks = capacity * self.max_blocks + 1  # +1 scratch
         self.kv = PagedKVCache(cfg, num_blocks, block_size)
+        if faults is not None:
+            self.kv.allocator.fault_hook = faults.fail_alloc
 
         self._prefill, self._decode = _jit_steps(model)
 
@@ -220,61 +304,130 @@ class ServeScheduler:
                 return b
         raise AssertionError(f"{active} active > capacity {self.capacity}")
 
+    def admissible(self, r: Request) -> bool:
+        """Whether the pool could ever hold this request: its block need
+        fits the table width and the (empty) pool."""
+        return self.kv.blocks_for(self.total_len(r)) <= min(
+            self.max_blocks, self.kv.num_blocks - 1)
+
     # -- the loop ----------------------------------------------------------
 
     def run(self, requests: list[Request]) -> tuple[dict[int, RequestResult], ServeStats]:
-        for r in requests:
-            need = self.total_len(r)
-            if self.kv.blocks_for(need) > min(self.max_blocks,
-                                              self.kv.num_blocks - 1):
-                raise ValueError(
-                    f"request {r.rid} needs {need} cache positions; pool is "
-                    f"{self.max_blocks} blocks x {self.block_size}")
-        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        results: dict[int, RequestResult] = {}
+        stats = ServeStats(capacity=self.capacity)
+        faults = self.faults
+        if faults is not None:
+            faults.reset()
+
+        # per-request admissibility: reject the oversized request, keep the
+        # trace alive (the pre-robustness scheduler raised for everyone)
+        admissible: list[Request] = []
+        for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            if self.admissible(r):
+                admissible.append(r)
+                continue
+            log.warning(
+                "request %d needs %d cache positions; pool is %d blocks x %d"
+                " — rejected", r.rid, self.total_len(r), self.max_blocks,
+                self.block_size)
+            results[r.rid] = RequestResult(
+                rid=r.rid, tokens=None, admitted_step=-1, finished_step=-1,
+                status=RequestStatus.REJECTED)
+            stats.rejections += 1
+
+        pending = deque(admissible)
         waiting: deque[Request] = deque()
         slots: list[_Slot] = []
+        origin = {r.rid: r for r in requests}   # pre-preemption identity
+        first_admit: dict[int, int] = {}
+        preempts: dict[int, int] = {}
         C, nb = self.capacity, self.max_blocks
         tables = np.zeros((C, nb), np.int32)      # pad rows -> scratch block
         positions = np.zeros((C,), np.int32)
         tok = jnp.zeros((C,), jnp.int32)          # device-resident slot tokens
         pool_k, pool_v = self.kv.k, self.kv.v
         step = 0
+        starved = 0
         tokens_out = 0
-        # per decode step: (token array (bucket,), rids of active slots);
-        # prefill first-tokens ride the same list — everything is fetched
-        # from device in ONE transfer after the loop (`drain`), never per step
-        emitted: list[tuple[jax.Array, tuple[int, ...]]] = []
-        results: dict[int, RequestResult] = {}
-        stats = ServeStats(capacity=C)
+        # per decode step: (token array (bucket,), finite flags, rids of
+        # active slots); prefill first-tokens ride the same list —
+        # everything is fetched from device in ONE transfer after the loop
+        # (`drain`), never per step
+        emitted: list[tuple[jax.Array, jax.Array, tuple[int, ...]]] = []
 
         def note_event():
             jax.block_until_ready(tok)
             stats.events.append((stats.steps, tokens_out, time.perf_counter()))
 
-        def evict_finished():
+        def remove_slot(i: int, status: RequestStatus | None):
+            """Free slot ``i`` with swap-with-last compaction.  ``status``
+            None means preemption: blocks return but no result is final."""
             nonlocal tok
+            s = slots[i]
+            if status is not None:
+                results[s.rid] = RequestResult(
+                    rid=s.rid, tokens=None,
+                    admitted_step=first_admit.get(s.rid, s.admitted_step),
+                    finished_step=step, status=status,
+                    preemptions=preempts.get(s.rid, 0))
+            self.kv.free(s.blocks)
+            last = len(slots) - 1
+            if i != last:
+                slots[i] = slots[last]
+                tables[i] = tables[last]
+                positions[i] = positions[last]
+                tok = tok.at[i].set(tok[last])
+            slots.pop()
+            tables[len(slots)] = 0
+            positions[len(slots)] = 0
+            return s
+
+        def evict_finished():
             done = [i for i, s in enumerate(slots) if s.remaining == 0]
             for i in reversed(done):  # compact from the back: swap-with-last
-                s = slots[i]
-                results[s.rid] = RequestResult(
-                    rid=s.rid, tokens=None, admitted_step=s.admitted_step,
-                    finished_step=step)
-                self.kv.free(s.blocks)
-                last = len(slots) - 1
-                if i != last:
-                    slots[i] = slots[last]
-                    tables[i] = tables[last]
-                    positions[i] = positions[last]
-                    tok = tok.at[i].set(tok[last])
-                slots.pop()
-                tables[len(slots)] = 0
-                positions[len(slots)] = 0
+                rid = slots[i].rid
+                remove_slot(i, RequestStatus.PREEMPTED_RESUMED
+                            if preempts.get(rid) else RequestStatus.OK)
             return bool(done)
+
+        def preempt(i: int):
+            """Free the victim's blocks and re-queue it carrying its
+            generated-so-far tokens; re-admission replays the prefix."""
+            s = remove_slot(i, None)
+            gen = self._generated(emitted, s.rid)
+            r0 = origin[s.rid]
+            resumed = Request(
+                rid=s.rid, prompt=np.concatenate([r0.prompt, gen]),
+                max_new=r0.max_new - len(gen), arrival=step,
+                deadline=r0.deadline)
+            waiting.appendleft(resumed)  # it held a slot: front of the line
+            preempts[s.rid] = preempts.get(s.rid, 0) + 1
+            stats.preemptions += 1
+
+        def shed_expired():
+            if self.deadline is None and all(
+                    r.deadline is None for r in waiting):
+                return
+            kept: deque[Request] = deque()
+            while waiting:
+                r = waiting.popleft()
+                ttl = r.deadline if r.deadline is not None else self.deadline
+                if ttl is not None and step - r.arrival > ttl:
+                    results[r.rid] = RequestResult(
+                        rid=r.rid, tokens=None,
+                        admitted_step=first_admit.get(r.rid, -1),
+                        finished_step=step, status=RequestStatus.TIMEOUT,
+                        preemptions=preempts.get(r.rid, 0))
+                    stats.timeouts += 1
+                else:
+                    kept.append(r)
+            waiting.extend(kept)
 
         note_event()
         while pending or waiting or slots:
             while pending and pending[0].arrival <= step:
                 waiting.append(pending.popleft())
+            shed_expired()
             synced = False
             while waiting and len(slots) < C:
                 r = waiting[0]
@@ -282,46 +435,107 @@ class ServeScheduler:
                 if blocks is None:
                     break  # pool exhausted: FIFO-wait for evictions
                 waiting.popleft()
-                tok, pool_k, pool_v, first = self._admit(
+                starved = 0
+                first_admit.setdefault(r.rid, step)
+                if preempts.get(r.rid):
+                    stats.replays += 1
+                tok, pool_k, pool_v, first, ok = self._admit(
                     r, len(slots), blocks, slots, tables, positions, tok,
                     pool_k, pool_v, step)
-                emitted.append((first, (r.rid,)))
+                emitted.append((first, ok, (r.rid,)))
                 tokens_out += 1
                 stats.prefills += 1
                 synced |= evict_finished()  # max_new == 1: done at prefill
                 synced = True
+            # bounded admission: the queue never grows past max_queue —
+            # the newest arrival is load-shed (the head keeps its FIFO turn)
+            while self.max_queue is not None and len(waiting) > self.max_queue:
+                r = waiting.pop()
+                results[r.rid] = RequestResult(
+                    rid=r.rid, tokens=None,
+                    admitted_step=first_admit.get(r.rid, -1),
+                    finished_step=step, status=RequestStatus.REJECTED,
+                    preemptions=preempts.get(r.rid, 0))
+                stats.rejections += 1
             if synced:
                 note_event()
             if not slots:
-                if pending:
+                if pending and not waiting:
                     step = max(step, pending[0].arrival)  # idle: skip ahead
                     continue
                 if waiting:
-                    raise AssertionError(
-                        "empty slot table but queued requests: pool cannot "
-                        "satisfy an admissible request")
+                    # empty slot table + a queued admissible request: only
+                    # injected allocation faults (transient) or a leak can
+                    # cause this.  Retry; past the retry budget, shed the
+                    # head — degrade, never crash.
+                    starved += 1
+                    if (faults is not None and starved <= STARVATION_RETRY_LIMIT):
+                        step += 1
+                        continue
+                    r = waiting.popleft()
+                    log.error(
+                        "pool cannot satisfy admissible request %d with an "
+                        "empty slot table — shedding it as FAILED", r.rid)
+                    results[r.rid] = RequestResult(
+                        rid=r.rid, tokens=None,
+                        admitted_step=first_admit.get(r.rid, -1),
+                        finished_step=step, status=RequestStatus.FAILED,
+                        preemptions=preempts.get(r.rid, 0))
+                    continue
                 break
             b = self.bucket(len(slots))
-            tok_b, pool_k, pool_v = self._decode(
+            poison = np.zeros((b,), bool)
+            poisoned = None
+            if faults is not None:
+                dt = faults.spike()
+                if dt:
+                    time.sleep(dt)
+                poisoned = faults.pick_poison(step, len(slots))
+                if poisoned is not None:
+                    poison[poisoned] = True
+            tok_b, ok_b, pool_k, pool_v = self._decode(
                 self.params, pool_k, pool_v,
-                jnp.asarray(tables[:b]), jnp.asarray(positions[:b]), tok[:b])
+                jnp.asarray(tables[:b]), jnp.asarray(positions[:b]), tok[:b],
+                jnp.asarray(poison))
             tok = tok.at[:b].set(tok_b)
             step += 1
             stats.steps += 1
             stats.active_per_step.append(len(slots))
             stats.bucket_per_step.append(b)
-            emitted.append((tok_b, tuple(s.rid for s in slots)))
+            emitted.append((tok_b, ok_b, tuple(s.rid for s in slots)))
             tokens_out += len(slots)
             for s in slots:
                 s.pos += 1
                 s.remaining -= 1
             positions[:len(slots)] += 1
-            if evict_finished():
+            if poisoned is not None:
+                # the host scheduled this poison: evict the failed slot
+                # eagerly (no readback needed); the drain truncates its
+                # stream at the poisoned token via the finiteness flags
+                remove_slot(poisoned, RequestStatus.FAILED)
+                synced = True
+            else:
+                synced = False
+            synced |= evict_finished()
+            if faults is not None and slots:
+                victim = faults.pick_preempt(step, len(slots))
+                if victim is not None:
+                    note_event()  # the replay prefix needs a token readback
+                    preempt(victim)
+                    synced = True
+            if synced:
                 note_event()
         note_event()
         self.kv.k, self.kv.v = pool_k, pool_v
         stats.tokens = tokens_out
         self._drain(emitted, results)
+        stats.failures = sum(
+            1 for res in results.values()
+            if res.status is RequestStatus.FAILED)
+        if faults is not None:
+            stats.faults_injected = dict(faults.injected)
+        missing = {r.rid for r in requests} - set(results)
+        assert not missing, f"requests {missing} ended without a status"
         return results, stats
 
     def _admit(self, r: Request, row: int, blocks: list[int], slots, tables,
@@ -338,7 +552,7 @@ class ServeScheduler:
         ptable = np.zeros((1, nb_p), np.int32)
         for j in range(min(nb_p, len(blocks))):
             ptable[0, j] = blocks[j]
-        first, pool_k, pool_v = self._prefill(
+        first, ok, pool_k, pool_v = self._prefill(
             self.params, jnp.asarray(prompt),
             jnp.asarray(np.array([p], np.int32)), jnp.asarray(ptable),
             pool_k, pool_v)
@@ -348,18 +562,39 @@ class ServeScheduler:
         tok = tok.at[row].set(first[0])
         slots.append(_Slot(rid=r.rid, pos=p, remaining=r.max_new - 1,
                            blocks=blocks, admitted_step=step))
-        return tok, pool_k, pool_v, first
+        return tok, pool_k, pool_v, first, ok
+
+    def _generated(self, emitted, rid: int) -> np.ndarray:
+        """This request's generated-so-far tokens (all incarnations), read
+        back from the emitted stream — the replay prefix for preemption."""
+        picks = [(j, rids.index(rid)) for j, (_, _, rids) in enumerate(emitted)
+                 if rid in rids]
+        host = jax.device_get([emitted[j][0] for j, _ in picks])
+        return np.asarray([int(a[col]) for a, (_, col) in zip(host, picks)],
+                          np.int32)
 
     def _drain(self, emitted, results) -> None:
         """One device->host transfer for every token of the run, then
-        scatter them back into per-request streams."""
-        host = jax.device_get([t for t, _ in emitted])
+        scatter them back into per-request streams.  The non-finite-logit
+        guard lands here: a stream whose finiteness flag dropped is
+        truncated at the first poisoned token and its request marked
+        FAILED — neighbours' streams are untouched."""
+        host_tok = jax.device_get([t for t, _, _ in emitted])
+        host_ok = jax.device_get([o for _, o, _ in emitted])
         streams: dict[int, list[int]] = {}
-        for arr, (_, rids) in zip(host, emitted):
+        fine: dict[int, list[bool]] = {}
+        for arr, oks, (_, _, rids) in zip(host_tok, host_ok, emitted):
             for i, rid in enumerate(rids):
                 streams.setdefault(rid, []).append(int(arr[i]))
+                fine.setdefault(rid, []).append(bool(oks[i]))
         for rid, toks in streams.items():
-            results[rid].tokens = np.asarray(toks, np.int32)
+            flags = fine[rid]
+            if all(flags):
+                results[rid].tokens = np.asarray(toks, np.int32)
+            else:
+                bad = flags.index(False)
+                results[rid].tokens = np.asarray(toks[:bad], np.int32)
+                results[rid].status = RequestStatus.FAILED
 
 
 def run_fixed_batch(model, params, requests: list[Request], *,

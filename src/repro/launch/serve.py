@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.scheduler import (
+    RequestStatus,
     ServeScheduler,
     poisson_trace,
     run_fixed_batch,
@@ -38,6 +39,7 @@ from repro.launch.scheduler import (
 )
 from repro.launch.steps import make_decode_step, make_prefill_step, setup_plan_cache
 from repro.models import Model, get_config
+from repro.runtime.fault_injection import FaultPlan
 
 
 def parse_mesh(spec: str):
@@ -85,7 +87,20 @@ def main() -> None:
                     help="KV cache block size in tokens")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
-                    help="assert token streams == classic per-request decode")
+                    help="assert token streams == classic per-request decode "
+                         "(under --faults: every *completed* stream must "
+                         "still match, and every request must end in a "
+                         "terminal status)")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="queue-wait TTL in decode steps: a request still "
+                         "waiting past it times out (0 = no deadline)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on the waiting queue; the newest arrival is "
+                         "load-shed when it would overflow (0 = unbounded)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault injection, e.g. "
+                         "'alloc=0.1,nan=0.02,preempt=0.05,latency=0.01"
+                         "[,seed=N]' (see runtime/fault_injection.py)")
     ap.add_argument("--fixed-batch", action="store_true",
                     help="run the legacy fixed-batch loop instead")
     ap.add_argument("--cache-len", type=int, default=128,
@@ -150,9 +165,13 @@ def _serve(args, cfg, mesh) -> None:
     trace = poisson_trace(
         args.requests, vocab=cfg.vocab_size, max_prompt=args.prompt_len,
         max_gen=args.gen, rate=args.arrival_rate, seed=args.seed)
+    faults = (FaultPlan.from_spec(args.faults, seed=args.seed)
+              if args.faults else None)
     sched = ServeScheduler(
         model, params, capacity=args.slots, block_size=args.block_size,
-        max_total_len=args.prompt_len + args.gen)
+        max_total_len=args.prompt_len + args.gen,
+        deadline=args.deadline or None, max_queue=args.max_queue or None,
+        faults=faults)
     t0 = time.perf_counter()
     results, stats = sched.run(trace)
     wall = time.perf_counter() - t0
@@ -162,13 +181,22 @@ def _serve(args, cfg, mesh) -> None:
     print(f"  {stats.steps} decode steps, {stats.prefills} prefills, "
           f"slot utilization {stats.slot_utilization:.2f}, "
           f"bucket histogram {stats.bucket_histogram()}")
+    if faults is not None or stats.rejections or stats.timeouts:
+        statuses: dict[str, int] = {}
+        for res in results.values():
+            statuses[res.status.value] = statuses.get(res.status.value, 0) + 1
+        print(f"  statuses {statuses} | preemptions {stats.preemptions}, "
+              f"replays {stats.replays}, injected {stats.faults_injected}")
     for r in trace[:3]:
-        print(f"  req{r.rid}: {results[r.rid].tokens[:12].tolist()}")
+        res = results[r.rid]
+        toks = res.tokens[:12].tolist() if res.tokens is not None else None
+        print(f"  req{r.rid} [{res.status.value}]: {toks}")
 
     if args.verify:
         cache_len = sched.max_blocks * sched.block_size
-        ref = sequential_reference(model, params, trace, cache_len)
-        bad = [r.rid for r in trace
+        completed = [r for r in trace if results[r.rid].status.completed]
+        ref = sequential_reference(model, params, completed, cache_len)
+        bad = [r.rid for r in completed
                if not np.array_equal(results[r.rid].tokens, ref[r.rid])]
         if bad:
             for rid in bad[:3]:
@@ -176,10 +204,19 @@ def _serve(args, cfg, mesh) -> None:
                       f"{results[rid].tokens.tolist()} != sequential "
                       f"{ref[rid].tolist()}")
             raise SystemExit(
-                f"verify FAILED: {len(bad)}/{len(trace)} streams diverge "
-                "from per-request sequential decode")
-        print(f"verify: {len(trace)}/{len(trace)} token streams identical "
-              "to per-request sequential decode")
+                f"verify FAILED: {len(bad)}/{len(completed)} completed "
+                "streams diverge from per-request sequential decode")
+        if faults is not None:
+            terminal = all(isinstance(res.status, RequestStatus)
+                           for res in results.values())
+            assert terminal and len(results) == len(trace)
+            print(f"verify: {len(completed)}/{len(trace)} completed under "
+                  f"{faults.describe()}; every completed stream identical "
+                  "to per-request sequential decode, every request in a "
+                  "terminal status")
+        else:
+            print(f"verify: {len(completed)}/{len(trace)} token streams "
+                  "identical to per-request sequential decode")
 
 
 def _serve_fixed(args, cfg, model, params) -> None:

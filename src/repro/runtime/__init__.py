@@ -1,6 +1,7 @@
 """Distributed runtime: fault tolerance, stragglers, gradient compression, paged KV."""
 
 from .compression import compressed_psum, compression_ratio, dequantize_int8, quantize_int8
+from .fault_injection import FaultPlan
 from .fault_tolerance import ElasticController, RunnerConfig, SimulatedNodeFailure, TrainRunner
 from .kv_cache import SCRATCH_BLOCK, BlockAllocator, PagedKVCache, write_prefill_blocks
 from .straggler import ShardAssignment, StragglerConfig, StragglerTracker
@@ -8,6 +9,7 @@ from .straggler import ShardAssignment, StragglerConfig, StragglerTracker
 __all__ = [
     "BlockAllocator",
     "ElasticController",
+    "FaultPlan",
     "PagedKVCache",
     "SCRATCH_BLOCK",
     "RunnerConfig",

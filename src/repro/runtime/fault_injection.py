@@ -1,0 +1,154 @@
+"""Seeded, deterministic fault injection for the serving runtime.
+
+Datacenter serving is governed by tail behavior and availability, not peak
+throughput — the scheduler has to survive allocation failures, poisoned
+device math, preemptions and latency spikes without taking the whole trace
+down.  This module is the *controlled* version of those conditions: a
+``FaultPlan`` is a seeded schedule of injected faults that
+``launch.scheduler.ServeScheduler`` consults at well-defined points, so a
+chaos run is exactly reproducible (same seed + same trace = same faults)
+and the degradation it causes can be asserted, not eyeballed.
+
+Fault classes (each with a per-consult probability, plus an explicit
+schedule form for deterministic unit tests):
+
+  * **alloc** — a KV block allocation fails even though the pool could
+    satisfy it (transient HBM pressure).  Injected *inside*
+    ``BlockAllocator.alloc`` via its ``fault_hook``, so injected and
+    organic pool exhaustion flow through the same scheduler code path
+    (FIFO wait / preempt, never crash).
+  * **nan** — one active slot's decode logits are overwritten with NaN
+    for one step (a poisoned reduction / device fault).  The scheduler's
+    non-finite-logit guard must fail only that request; its neighbours'
+    streams stay bitwise unchanged.
+  * **preempt** — one active slot is preempted: its blocks are freed and
+    the request re-queued carrying its generated-so-far tokens.  On
+    re-admission the scheduler replays ``prompt + generated`` through
+    prefill; greedy decode is a pure function of the prefix, so the
+    resumed stream must be bitwise identical to the uninterrupted run.
+  * **latency** — a host-side latency spike (a short sleep) before the
+    next decode step; changes only the event-stream timings, never bits.
+
+Consult order inside one scheduler step is fixed (alloc hooks during
+admission, then poison, then latency, then preempt), so a ``FaultPlan``'s
+lazily-advanced RNG is deterministic per run.  ``reset()`` rewinds the
+plan; the scheduler calls it at the top of every ``run`` so one plan
+object can drive repeated replays (benchmark warm-up + measured pass)
+identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+FAULT_KINDS = ("alloc", "nan", "preempt", "latency")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A seeded fault schedule for one (replayable) serving run.
+
+    Probabilities are per consult: ``alloc_fail`` per allocation attempt,
+    ``nan`` / ``preempt`` / ``latency`` per decode step.  The ``*_at``
+    forms inject deterministically — ``alloc_fail_at`` holds allocation
+    call indices, ``poison_at`` / ``preempt_at`` hold ``(decode_step,
+    slot_row)`` pairs — and are checked before the probabilistic draws,
+    so unit tests can place a single fault exactly.
+    """
+
+    seed: int = 0
+    alloc_fail: float = 0.0
+    nan: float = 0.0
+    preempt: float = 0.0
+    latency: float = 0.0
+    latency_s: float = 5e-4
+    alloc_fail_at: tuple[int, ...] = ()
+    poison_at: tuple[tuple[int, int], ...] = ()
+    preempt_at: tuple[tuple[int, int], ...] = ()
+
+    def __post_init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind the schedule: same seed -> same faults on the next run."""
+        self._rng = np.random.default_rng(self.seed)
+        self._alloc_calls = 0
+        self.injected: dict[str, int] = {k: 0 for k in FAULT_KINDS}
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    # -- consult points (order inside a step is fixed; see module doc) ------
+
+    def fail_alloc(self, n_blocks: int) -> bool:
+        """``BlockAllocator.fault_hook``: True fails this allocation."""
+        idx = self._alloc_calls
+        self._alloc_calls += 1
+        hit = idx in self.alloc_fail_at or (
+            self.alloc_fail > 0 and self._rng.random() < self.alloc_fail)
+        if hit:
+            self.injected["alloc"] += 1
+        return hit
+
+    def pick_poison(self, step: int, n_slots: int) -> int | None:
+        """Slot row whose logits get NaN-poisoned this decode step."""
+        return self._pick("nan", self.poison_at, self.nan, step, n_slots)
+
+    def pick_preempt(self, step: int, n_slots: int) -> int | None:
+        """Slot row to preempt after this decode step."""
+        return self._pick("preempt", self.preempt_at, self.preempt, step,
+                          n_slots)
+
+    def spike(self) -> float:
+        """Seconds of injected host latency before the next decode step."""
+        if self.latency > 0 and self._rng.random() < self.latency:
+            self.injected["latency"] += 1
+            return self.latency_s
+        return 0.0
+
+    def _pick(self, kind: str, explicit, rate: float, step: int,
+              n_slots: int) -> int | None:
+        if n_slots <= 0:
+            return None
+        for s, row in explicit:
+            if s == step and row < n_slots:
+                self.injected[kind] += 1
+                return row
+        if rate > 0 and self._rng.random() < rate:
+            self.injected[kind] += 1
+            return int(self._rng.integers(n_slots))
+        return None
+
+    # -- CLI spec -----------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: str, seed: int = 0) -> "FaultPlan":
+        """Parse ``'alloc=0.1,nan=0.02,preempt=0.05,latency=0.01'`` (any
+        subset; optional ``seed=N`` overrides the default seed)."""
+        kw: dict[str, float] = {}
+        names = {"alloc": "alloc_fail", "nan": "nan", "preempt": "preempt",
+                 "latency": "latency", "latency_s": "latency_s"}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            key, _, val = part.partition("=")
+            key = key.strip()
+            if key == "seed":
+                seed = int(val)
+            elif key in names:
+                kw[names[key]] = float(val)
+            else:
+                raise ValueError(
+                    f"unknown fault class {key!r} in spec {spec!r} "
+                    f"(known: {', '.join(names)}, seed)")
+        return cls(seed=seed, **kw)
+
+    def describe(self) -> str:
+        on = [f"{k}={v:g}" for k, v in (
+            ("alloc", self.alloc_fail), ("nan", self.nan),
+            ("preempt", self.preempt), ("latency", self.latency)) if v > 0]
+        on += [f"{k}@{len(v)}" for k, v in (
+            ("alloc", self.alloc_fail_at), ("nan", self.poison_at),
+            ("preempt", self.preempt_at)) if v]
+        return f"FaultPlan(seed={self.seed}, {', '.join(on) or 'empty'})"

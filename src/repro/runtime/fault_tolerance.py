@@ -34,6 +34,12 @@ class RunnerConfig:
     max_steps: int = 1000
     max_restarts: int = 10
     async_ckpt: bool = False
+    # exception types the restart loop recovers from.  The default covers
+    # only the injected test failure; production configs widen it to the
+    # runtime's actual failure surface, e.g. (SimulatedNodeFailure,
+    # jax.errors.JaxRuntimeError) for XLA device loss / preemption —
+    # anything else (a programming error) still propagates.
+    recoverable: tuple[type[BaseException], ...] = (SimulatedNodeFailure,)
 
 
 class TrainRunner:
@@ -41,7 +47,10 @@ class TrainRunner:
 
     ``state`` is any pytree (params + optimizer + rng).  ``failure_hook`` may
     raise at chosen steps to inject faults (tests) — in production the same
-    path catches XLA device errors / preemptions.
+    path recovers from whatever ``cfg.recoverable`` names (XLA device
+    errors / preemptions).  On restart, ``metrics_log`` is truncated back
+    to the last committed checkpoint so replayed steps never append
+    duplicate entries — the log always reads as one consistent history.
     """
 
     def __init__(
@@ -74,6 +83,11 @@ class TrainRunner:
     def run(self) -> tuple[Any, int]:
         while True:
             state, step = self._restore_or_init()
+            # drop metrics from steps past the restored checkpoint: they are
+            # about to be replayed (bit-exactly) and would otherwise appear
+            # twice in the log
+            self.metrics_log = [m for m in self.metrics_log
+                                if m["step"] <= step]
             try:
                 while step < self.cfg.max_steps:
                     if self.failure_hook is not None:
@@ -88,7 +102,7 @@ class TrainRunner:
                             async_write=self.cfg.async_ckpt,
                         )
                 return state, step
-            except SimulatedNodeFailure as e:
+            except self.cfg.recoverable as e:
                 self.restarts += 1
                 if self.restarts > self.cfg.max_restarts:
                     raise RuntimeError("restart budget exhausted") from e

@@ -41,9 +41,16 @@ class BlockAllocator:
     evictions return blocks.  Double-frees and frees of never-allocated ids
     raise: a block table pointing at a re-issued block is silent cache
     corruption, the one failure mode a paged cache must never hide.
+
+    ``fault_hook`` is the fault-injection seam (``runtime.fault_injection``):
+    when set, it is consulted on every ``alloc`` and a True return fails the
+    allocation even though the pool could satisfy it — so injected transient
+    allocation failures flow through the exact code path organic pool
+    exhaustion takes (the caller queues or preempts, never crashes).
     """
 
     def __init__(self, num_blocks: int, reserved: int = 1):
+        self.fault_hook = None  # Callable[[int], bool] | None
         if num_blocks <= reserved:
             raise ValueError(
                 f"pool of {num_blocks} blocks leaves nothing to allocate "
@@ -65,9 +72,12 @@ class BlockAllocator:
         return len(self._live)
 
     def alloc(self, n: int) -> list[int] | None:
-        """Allocate ``n`` blocks, or None when fewer than ``n`` are free."""
+        """Allocate ``n`` blocks, or None when fewer than ``n`` are free
+        (or an injected fault fails the attempt — see ``fault_hook``)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
+        if self.fault_hook is not None and self.fault_hook(n):
+            return None
         if n > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]

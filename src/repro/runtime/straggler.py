@@ -27,15 +27,20 @@ class StragglerTracker:
         self.cfg = cfg
         self.num_hosts = num_hosts
         self.ewma_times = np.zeros(num_hosts)
+        # explicit first-observation flag: a zero EWMA is a legitimate value
+        # (a host reporting ~0 step times must not be re-seeded forever)
+        self._seeded = False
         self.strikes = np.zeros(num_hosts, dtype=int)
         self.history: list[np.ndarray] = []
 
     def observe(self, step_times: np.ndarray) -> list[int]:
         """step_times: per-host seconds for this step. Returns flagged hosts."""
         a = self.cfg.ewma
-        self.ewma_times = np.where(
-            self.ewma_times == 0, step_times, a * step_times + (1 - a) * self.ewma_times
-        )
+        if not self._seeded:
+            self.ewma_times = np.asarray(step_times, float).copy()
+            self._seeded = True
+        else:
+            self.ewma_times = a * step_times + (1 - a) * self.ewma_times
         self.history.append(step_times)
         med = np.median(self.ewma_times)
         slow = self.ewma_times > self.cfg.threshold * med

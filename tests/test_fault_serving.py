@@ -1,0 +1,376 @@
+"""Fault-tolerant serving: preempt-and-replay determinism, lifecycle
+hardening, and the fault-injection harness.
+
+The contract under test extends the scheduler's determinism guarantee to
+degraded operation: whatever faults strike mid-flight — injected KV
+allocation failures, NaN-poisoned logits, forced preemptions, latency
+spikes — the run must never crash, every request must end in a terminal
+``RequestStatus``, and every *completed* stream must remain bitwise
+identical to the uninterrupted clean run (greedy decode is a pure function
+of the prefix, so replaying ``prompt + generated`` through prefill resumes
+a preempted stream exactly).  The property sweep randomizes fault schedules
+over all four fault classes; the deterministic tests pin each mechanism in
+isolation.  Plan-cache load hardening (corrupt / future-schema quarantine)
+rides along because it protects the same launch path.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core import load_or_autotune, model_gemms, save_plan
+from repro.launch.scheduler import (
+    Request,
+    RequestStatus,
+    ServeScheduler,
+    poisson_trace,
+)
+from repro.launch.serve import sequential_reference
+from repro.models import Model, get_config
+from repro.runtime import FaultPlan
+
+
+_MODEL_CACHE: list = []
+
+
+def _get_model():
+    """Module-cached smoke model (plain function, not a fixture, so the
+    @given property sweep can use it too — the _propcheck fallback hides
+    test parameters from pytest's fixture resolution)."""
+    if not _MODEL_CACHE:
+        cfg = get_config("qwen3_4b", smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE.append((cfg, model, params))
+    return _MODEL_CACHE[0]
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    return _get_model()
+
+
+def _trace(cfg, n=6, rate=0.0, seed=3, max_prompt=14, max_gen=6):
+    return poisson_trace(n, vocab=cfg.vocab_size, max_prompt=max_prompt,
+                         max_gen=max_gen, rate=rate, seed=seed)
+
+
+def _sched(model, params, faults=None, **kw):
+    kw.setdefault("capacity", 4)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("max_total_len", 14 + 6)
+    return ServeScheduler(model, params, faults=faults, **kw)
+
+
+def _clean_run(model, params, trace, **kw):
+    results, _ = _sched(model, params, **kw).run(
+        [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                 arrival=r.arrival) for r in trace])
+    return results
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: the schedule itself is deterministic and seeded
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_spec_roundtrip_and_determinism():
+    fp = FaultPlan.from_spec("alloc=0.1,nan=0.02,preempt=0.05,latency=0.5,seed=7")
+    assert (fp.alloc_fail, fp.nan, fp.preempt, fp.latency, fp.seed) == \
+        (0.1, 0.02, 0.05, 0.5, 7)
+    draws = [(fp.fail_alloc(2), fp.pick_poison(s, 4), fp.pick_preempt(s, 4),
+              fp.spike()) for s in range(64)]
+    fp.reset()
+    replay = [(fp.fail_alloc(2), fp.pick_poison(s, 4), fp.pick_preempt(s, 4),
+               fp.spike()) for s in range(64)]
+    assert draws == replay, "same seed must reproduce the same schedule"
+    assert fp.total_injected > 0
+    assert set(fp.injected) == {"alloc", "nan", "preempt", "latency"}
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec("bogus=1")
+
+
+def test_fault_plan_explicit_events():
+    fp = FaultPlan(alloc_fail_at=(0, 2), poison_at=((5, 1),),
+                   preempt_at=((7, 0),))
+    assert fp.fail_alloc(1) and not fp.fail_alloc(1) and fp.fail_alloc(1)
+    assert fp.pick_poison(4, 4) is None
+    assert fp.pick_poison(5, 4) == 1
+    assert fp.pick_poison(5, 1) is None  # row out of range: no-op
+    assert fp.pick_preempt(7, 2) == 0
+    assert fp.injected["alloc"] == 2 and fp.injected["nan"] == 1
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-replay: deterministic resume
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_replay_is_bitwise_deterministic(smoke_model):
+    """A forced preemption mid-decode frees the victim's blocks, re-queues
+    it carrying its generated-so-far tokens, and the resumed stream is
+    bitwise identical to the uninterrupted run."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg)  # rate=0: decode steps are contiguous from 0
+    clean = _clean_run(model, params, trace)
+    faults = FaultPlan(preempt_at=((2, 0), (4, 1)))
+    sched = _sched(model, params, faults=faults)
+    results, stats = sched.run(trace)
+    assert stats.preemptions >= 1 and stats.replays == stats.preemptions
+    assert stats.faults_injected["preempt"] == stats.preemptions
+    resumed = [rid for rid, r in results.items()
+               if r.status is RequestStatus.PREEMPTED_RESUMED]
+    assert resumed, "at least one request must have been preempted"
+    for r in trace:
+        got = results[r.rid]
+        assert got.status.completed
+        assert len(got.tokens) == r.max_new
+        np.testing.assert_array_equal(got.tokens, clean[r.rid].tokens)
+    for rid in resumed:
+        assert results[rid].preemptions >= 1
+    assert sched.kv.allocator.live_blocks == 0
+
+
+def test_injected_alloc_faults_degrade_to_waiting(smoke_model):
+    """Injected KV-allocation failures ride the organic exhaustion path:
+    admission FIFO-waits and retries, every stream still completes and
+    matches the clean run bitwise."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, seed=5)
+    clean = _clean_run(model, params, trace)
+    faults = FaultPlan(alloc_fail=0.5, seed=2)
+    sched = _sched(model, params, faults=faults)
+    results, stats = sched.run(trace)
+    assert stats.faults_injected["alloc"] >= 1
+    for r in trace:
+        assert results[r.rid].status.completed
+        np.testing.assert_array_equal(results[r.rid].tokens,
+                                      clean[r.rid].tokens)
+    assert sched.kv.allocator.live_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# non-finite-logit guard: fail the slot, not the batch
+# ---------------------------------------------------------------------------
+
+
+def test_nan_poison_fails_only_the_poisoned_slot(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _trace(cfg)
+    clean = _clean_run(model, params, trace)
+    faults = FaultPlan(poison_at=((1, 0),))
+    sched = _sched(model, params, faults=faults)
+    results, stats = sched.run(trace)
+    assert stats.faults_injected["nan"] == 1
+    failed = [rid for rid, r in results.items()
+              if r.status is RequestStatus.FAILED]
+    assert len(failed) == 1 and stats.failures == 1
+    bad = results[failed[0]]
+    if bad.tokens is not None:
+        # the surviving prefix is the clean stream truncated at the poison
+        n = len(bad.tokens)
+        assert n < len(clean[failed[0]].tokens)
+        np.testing.assert_array_equal(bad.tokens,
+                                      clean[failed[0]].tokens[:n])
+    for rid, r in results.items():
+        if rid == failed[0]:
+            continue
+        assert r.status is RequestStatus.OK
+        np.testing.assert_array_equal(r.tokens, clean[rid].tokens)
+    assert sched.kv.allocator.live_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# lifecycle hardening: rejection, load-shed, deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_oversized_request_rejected_among_normal_traffic(smoke_model):
+    """One inadmissible request in a normal trace: it alone is REJECTED,
+    every neighbor completes bitwise identical to a run without it."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, n=4)
+    clean = _clean_run(model, params, trace)
+    # needs 3 blocks (33 positions) against a 2-block table: inadmissible
+    huge = Request(rid=99, prompt=np.zeros(28, np.int32), max_new=6)
+    mixed = trace[:2] + [huge] + trace[2:]
+    results, stats = _sched(model, params).run(mixed)
+    assert results[99].status is RequestStatus.REJECTED
+    assert results[99].tokens is None
+    assert stats.rejections == 1
+    for r in trace:
+        assert results[r.rid].status is RequestStatus.OK
+        np.testing.assert_array_equal(results[r.rid].tokens,
+                                      clean[r.rid].tokens)
+
+
+def test_max_queue_load_sheds_newest_arrival(smoke_model):
+    """With capacity 1 and max_queue 1, a burst of 5 simultaneous arrivals
+    keeps the head of the queue and sheds from the back — the shed
+    requests get REJECTED, survivors complete correctly."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, n=5)
+    results, stats = _sched(model, params, capacity=1, max_queue=1).run(trace)
+    shed = [rid for rid, r in results.items()
+            if r.status is RequestStatus.REJECTED]
+    done = [rid for rid, r in results.items() if r.status.completed]
+    assert stats.rejections == len(shed) >= 1
+    assert len(done) + len(shed) == len(trace)
+    # FIFO: the shed set is a suffix of the arrival order
+    assert sorted(shed) == [r.rid for r in trace][-len(shed):]
+    ref = sequential_reference(
+        model, params, [r for r in trace if r.rid in done],
+        _sched(model, params).max_blocks * 16)
+    for rid in done:
+        np.testing.assert_array_equal(results[rid].tokens, ref[rid])
+
+
+def test_deadline_times_out_queued_requests(smoke_model):
+    """A tiny block pool makes later arrivals queue behind long decodes;
+    with a 1-step TTL they TIMEOUT instead of waiting forever.  Without a
+    deadline the same trace fully completes (the TTL is the only cause)."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg)
+    no_ttl, _ = _sched(model, params, capacity=8, num_blocks=3).run(trace)
+    assert all(r.status.completed for r in no_ttl.values())
+    results, stats = _sched(model, params, capacity=8, num_blocks=3,
+                            deadline=1).run(trace)
+    timed_out = [rid for rid, r in results.items()
+                 if r.status is RequestStatus.TIMEOUT]
+    assert stats.timeouts == len(timed_out) >= 1
+    for rid, r in results.items():
+        if rid in timed_out:
+            assert r.tokens is None
+        else:
+            assert r.status.completed
+            np.testing.assert_array_equal(r.tokens, no_ttl[rid].tokens)
+
+
+def test_per_request_deadline_overrides_scheduler_default(smoke_model):
+    cfg, model, params = smoke_model
+    trace = _trace(cfg)
+    # generous default, but one request insists on an impossible TTL while
+    # the pool is busy — only it times out
+    patient = [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                       deadline=1 if i == len(trace) - 1 else None)
+               for i, r in enumerate(trace)]
+    results, stats = _sched(model, params, capacity=8, num_blocks=3,
+                            deadline=10_000).run(patient)
+    assert results[trace[-1].rid].status is RequestStatus.TIMEOUT
+    assert stats.timeouts == 1
+
+
+# ---------------------------------------------------------------------------
+# the property sweep: randomized fault schedules never break the contract
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(fault_seed=st.integers(min_value=0, max_value=10_000),
+       trace_seed=st.integers(min_value=0, max_value=99),
+       heavy=st.booleans())
+def test_scheduler_survives_randomized_fault_schedules(
+        fault_seed, trace_seed, heavy):
+    """Any seeded mix of alloc failures, NaN poison, preemptions and
+    latency spikes: no crash, every request terminal, allocator fully
+    restored, and every completed stream bitwise equals the clean run."""
+    cfg, model, params = _get_model()
+    trace = _trace(cfg, rate=0.5, seed=trace_seed)
+    clean = _clean_run(model, params, trace)
+    scale = 2.0 if heavy else 1.0
+    faults = FaultPlan(seed=fault_seed, alloc_fail=0.15 * scale,
+                       nan=0.02 * scale, preempt=0.04 * scale,
+                       latency=0.05, latency_s=1e-5)
+    sched = _sched(model, params, faults=faults, deadline=10_000)
+    results, stats = sched.run(trace)
+
+    assert set(results) == {r.rid for r in trace}, "every request terminal"
+    assert sched.kv.allocator.live_blocks == 0, "allocator restored"
+    for r in trace:
+        got = results[r.rid]
+        assert isinstance(got.status, RequestStatus)
+        if got.status.completed:
+            assert len(got.tokens) == r.max_new
+            np.testing.assert_array_equal(got.tokens, clean[r.rid].tokens)
+        elif got.tokens is not None:  # FAILED with a partial stream
+            np.testing.assert_array_equal(
+                got.tokens, clean[r.rid].tokens[:len(got.tokens)])
+    assert stats.failures == sum(
+        1 for r in results.values() if r.status is RequestStatus.FAILED)
+    assert stats.replays == stats.preemptions
+    assert stats.faults_injected == faults.injected
+
+
+def test_fault_run_is_reproducible(smoke_model):
+    """The same trace + the same FaultPlan seed → identical statuses,
+    streams and injection counters across runs."""
+    cfg, model, params = smoke_model
+    trace = _trace(cfg, rate=0.5, seed=8)
+
+    def go():
+        faults = FaultPlan(seed=13, alloc_fail=0.2, nan=0.03, preempt=0.06)
+        sched = _sched(model, params, faults=faults, deadline=10_000)
+        results, stats = sched.run(
+            [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                     arrival=r.arrival) for r in trace])
+        return results, stats
+
+    a, sa = go()
+    b, sb = go()
+    assert sa.faults_injected == sb.faults_injected
+    assert (sa.preemptions, sa.timeouts, sa.failures) == \
+        (sb.preemptions, sb.timeouts, sb.failures)
+    for rid in a:
+        assert a[rid].status is b[rid].status
+        if a[rid].tokens is None:
+            assert b[rid].tokens is None
+        else:
+            np.testing.assert_array_equal(a[rid].tokens, b[rid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# plan-cache load hardening: quarantine, don't crash
+# ---------------------------------------------------------------------------
+
+GEMMS = lambda cfg: model_gemms(cfg, tokens=64)  # noqa: E731
+
+
+def test_corrupt_plan_cache_is_quarantined_and_retuned(tmp_path):
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    path = os.path.join(tmp_path, "plan.json")
+    with open(path, "w") as f:
+        f.write('{"version": 8, "layers": [truncated garbage')
+    plan, loaded = load_or_autotune(path, GEMMS(cfg), measure=False)
+    assert not loaded, "a corrupt cache must re-tune, not crash"
+    assert os.path.exists(path + ".corrupt"), "evidence preserved"
+    with open(path) as f:
+        assert json.load(f)["version"] == 8  # fresh plan persisted
+    again, loaded = load_or_autotune(path, GEMMS(cfg), measure=False)
+    assert loaded, "the re-tuned cache reloads cleanly next launch"
+
+
+def test_future_schema_plan_cache_is_quarantined(tmp_path):
+    """A cache written by a newer build (future schema version) is
+    quarantined and re-tuned — a rollback must not kill the launch."""
+    cfg = get_config("qwen3_4b", smoke=True).replace(use_pallas=True)
+    from repro.core import autotune_plan
+
+    plan = autotune_plan(GEMMS(cfg), measure=False)
+    path = os.path.join(tmp_path, "plan.json")
+    save_plan(path, plan)
+    with open(path) as f:
+        payload = json.load(f)
+    payload["version"] = 99
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    plan2, loaded = load_or_autotune(path, GEMMS(cfg), measure=False)
+    assert not loaded
+    assert os.path.exists(path + ".corrupt")
+    with open(path + ".corrupt") as f:
+        assert json.load(f)["version"] == 99  # original preserved verbatim
+    with open(path) as f:
+        assert json.load(f)["version"] == 8

@@ -92,6 +92,52 @@ def test_runner_resumes_from_latest_checkpoint_only():
         assert float(state["x"][0]) == sum(range(20))
 
 
+def test_runner_recoverable_exception_types():
+    """The restart loop recovers only from the types named in
+    ``cfg.recoverable`` — a production config widens it past the injected
+    test failure; a programming error still propagates."""
+
+    class DeviceLost(RuntimeError):
+        pass
+
+    fired = []
+
+    def bomb(step):
+        if step == 7 and not fired:
+            fired.append(1)
+            raise DeviceLost("XLA device disappeared")
+
+    with tempfile.TemporaryDirectory() as d:
+        r = _toy_runner(d, failure_hook=bomb)
+        r.cfg.recoverable = (SimulatedNodeFailure, DeviceLost)
+        state, step = r.run()
+        assert r.restarts == 1 and step == 20
+        assert float(state["x"][0]) == sum(range(20))
+
+    fired.clear()
+    with tempfile.TemporaryDirectory() as d:
+        r = _toy_runner(d, failure_hook=bomb)  # default: only the injected type
+        with pytest.raises(DeviceLost):
+            r.run()
+
+
+def test_runner_metrics_log_has_no_duplicate_steps():
+    """A crash between checkpoints replays committed steps; the metrics log
+    must read as one consistent history — each step exactly once."""
+    fired = []
+
+    def bomb(step):
+        if step == 13 and not fired:
+            fired.append(1)
+            raise SimulatedNodeFailure("preempted")
+
+    with tempfile.TemporaryDirectory() as d:
+        r = _toy_runner(d, failure_hook=bomb)
+        r.run()
+        steps = [m["step"] for m in r.metrics_log]
+        assert steps == list(range(1, 21)), "replayed steps appear once"
+
+
 # ---- stragglers ------------------------------------------------------------
 
 
@@ -118,6 +164,25 @@ def test_straggler_transient_spike_not_flagged():
         flagged = t.observe(np.ones(4))
     assert flagged == []  # EWMA decays before patience runs out
     assert t.p99_step_time() > 1.0
+
+
+def test_straggler_zero_step_time_host_is_tracked():
+    """A host reporting a 0.0 step time is a legitimate observation, not an
+    'unseeded' sentinel: subsequent observations must blend into its EWMA
+    instead of re-seeding it forever."""
+    t = StragglerTracker(4, StragglerConfig(ewma=0.5))
+    t.observe(np.array([0.0, 1.0, 1.0, 1.0]))  # host 0: instant heartbeat
+    assert t.ewma_times[0] == 0.0
+    t.observe(np.array([10.0, 1.0, 1.0, 1.0]))
+    # 0.5 * 10 + 0.5 * 0 — a re-seed would have produced 10.0
+    assert t.ewma_times[0] == pytest.approx(5.0)
+    # and the slow host is eventually flagged like any other
+    t2 = StragglerTracker(4, StragglerConfig(patience=2, ewma=0.5))
+    t2.observe(np.zeros(4))
+    flagged = []
+    for _ in range(4):
+        flagged = t2.observe(np.array([4.0, 1.0, 1.0, 1.0]))
+    assert flagged == [0]
 
 
 # ---- gradient compression ---------------------------------------------------

@@ -37,6 +37,7 @@ from repro.core import cmu as cmu_mod
 from repro.core.cmu import Dataflow, LayerPlan
 from repro.launch.scheduler import (
     Request,
+    RequestStatus,
     ServeScheduler,
     poisson_trace,
     run_fixed_batch,
@@ -211,12 +212,16 @@ def test_scheduler_queues_gracefully_on_block_exhaustion(smoke_model):
 
 
 def test_oversized_request_rejected_up_front(smoke_model):
+    """An inadmissible request (prompt + max_new exceeds the cache) gets a
+    per-request REJECTED result instead of crashing the whole batch."""
     cfg, model, params = smoke_model
     sched = ServeScheduler(model, params, capacity=4, block_size=16,
                            max_total_len=32)
     huge = [Request(rid=0, prompt=np.zeros(30, np.int32), max_new=10)]
-    with pytest.raises(ValueError, match="cache positions"):
-        sched.run(huge)
+    results, stats = sched.run(huge)
+    assert results[0].status is RequestStatus.REJECTED
+    assert results[0].tokens is None
+    assert stats.rejections == 1
 
 
 def test_fixed_batch_baseline_same_model(smoke_model):
