@@ -69,7 +69,8 @@ def bench_prefill(shape, iters: int, interpret: bool) -> dict:
         run = lambda s=sweep: mha_flash(q, k, v, causal=True, block_q=bq,
                                         block_k=bk, sweep=s,
                                         interpret=interpret)
-        cost = attn_traffic_bytes(shape, sweep, bq, bk)
+        cost = attn_traffic_bytes(shape, sweep, bq, bk,
+                                  in_bytes=2, out_bytes=2)
         bits[sweep] = np.asarray(run()).tobytes()
         out[sweep] = {
             "block": [bq, bk],
@@ -113,8 +114,8 @@ def bench_decode(shape, buckets, iters: int, interpret: bool) -> dict:
                                    atol=2e-5, rtol=2e-5)
         row = {}
         for kind, run in (("paged", paged), ("gather", gather)):
-            cost = attn_decode_traffic_bytes(shape, kind, b,
-                                             block_size=bs)
+            cost = attn_decode_traffic_bytes(shape, kind, b, block_size=bs,
+                                             in_bytes=2, out_bytes=2)
             row[kind] = {
                 "walltime_s": _time(lambda r=run: r(*args), iters),
                 "hbm_bytes": cost.hbm_bytes,

@@ -183,6 +183,114 @@ def check_invariants(trace, results, stats, sched) -> None:
     assert set(stats.bucket_histogram()) <= set(sched.buckets)
 
 
+def decode_gemm_hbm_bytes(plan, histogram: dict[int, int]) -> int:
+    """Analytic decode-GEMM HBM traffic of one serving lane: for every
+    (bucket, steps) pair in the scheduler's bucket histogram, the dtype-aware
+    roofline traffic of each layer's decode sub-plan at its planned
+    (dataflow, block, strip) geometry — weight at 1 byte plus the f32
+    per-channel scale when the verdict quantized, bf16 operands otherwise.
+    This is the decode-bandwidth economics ``--quant`` exists to buy."""
+    from repro.core import GemmShape, hbm_traffic_bytes
+
+    total = 0
+    for bucket, steps in histogram.items():
+        for lp in plan.layers:
+            gp = lp.decode[bucket]
+            g = GemmShape(M=bucket, K=lp.gemm.K, N=lp.gemm.N,
+                          name=f"{lp.name}@b{bucket}")
+            bm, bk, bn = gp.block
+            kw = (dict(a_bytes=2, b_bytes=1, scale_bytes=4)
+                  if gp.qdtype in ("int8", "fp8")
+                  else dict(a_bytes=2, b_bytes=2))
+            cost = hbm_traffic_bytes(g, gp.dataflow, bm, bk, bn,
+                                     strip=gp.strip, **kw)
+            total += steps * cost.hbm_bytes
+    return total
+
+
+def quant_bench(args) -> None:
+    """The ``--quant`` lane: one scheduler replay for tokens/walltime, then
+    the decode-GEMM bandwidth economics of the accuracy-gated quant plan vs
+    the bf16 plan over the replay's actual bucket histogram — written as
+    ``BENCH_quant.json`` with the gate metadata the CI checker pins."""
+    from repro.core import (
+        QUANT_ERROR_BUDGET,
+        autotune_plan,
+        model_epilogues,
+        model_gemms,
+    )
+    from repro.launch.scheduler import poisson_trace, serve_buckets
+
+    dtypes = tuple(q for q in args.quant.split(",") if q)
+    cfg, model, params = build_model(args.profile)
+    trace = poisson_trace(
+        args.requests, vocab=cfg.vocab_size, max_prompt=args.max_prompt,
+        max_gen=args.max_gen, rate=args.rate, seed=args.seed,
+        min_prompt=args.min_prompt, min_gen=args.min_gen)
+    _, cont = run_continuous(model, params, trace, args)
+    histogram = {int(b): n for b, n in cont["bucket_histogram"].items()}
+
+    buckets = serve_buckets(args.slots)
+    gemms = model_gemms(cfg, args.requests * args.max_prompt)
+    sigs = model_epilogues(cfg)
+    bf16_plan = autotune_plan(gemms, measure=False, decode_buckets=buckets,
+                              epilogue=sigs)
+    quant_plan = autotune_plan(gemms, measure=False, decode_buckets=buckets,
+                               epilogue=sigs, quant=dtypes)
+    assert quant_plan.has_quant(buckets)
+
+    verdicts: dict[str, int] = {}
+    qerrs = []
+    for lp in quant_plan.layers:
+        for gp in (lp, *lp.decode.values()):
+            verdicts[gp.qdtype] = verdicts.get(gp.qdtype, 0) + 1
+            if gp.qerror is not None:
+                qerrs.append(gp.qerror)
+    b_bf16 = decode_gemm_hbm_bytes(bf16_plan, histogram)
+    b_quant = decode_gemm_hbm_bytes(quant_plan, histogram)
+    ratio = b_quant / max(b_bf16, 1)
+    print(f"quant decode GEMM HBM: {b_quant:,} B vs bf16 {b_bf16:,} B "
+          f"over buckets {histogram} = {ratio:.2f}x")
+    print(f"verdicts {verdicts}, max gate error "
+          f"{max(qerrs) if qerrs else 0.0:.4f} "
+          f"(budget {QUANT_ERROR_BUDGET})")
+
+    if args.json:
+        record = {
+            "config": {
+                "profile": args.profile,
+                "requests": args.requests,
+                "slots": args.slots,
+                "prompt_len": [args.min_prompt, args.max_prompt],
+                "gen_len": [args.min_gen, args.max_gen],
+                "arrival_rate": args.rate,
+                "seed": args.seed,
+                "model": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                          "num_layers": cfg.num_layers,
+                          "vocab_size": cfg.vocab_size},
+            },
+            "walltime_s": cont["walltime_s"],
+            "tokens_per_s": cont["tokens_per_s"],
+            "bucket_histogram": cont["bucket_histogram"],
+            "quant": {
+                "dtypes": list(dtypes),
+                "budget": QUANT_ERROR_BUDGET,
+                "verdicts": verdicts,
+                "max_qerror": max(qerrs) if qerrs else 0.0,
+            },
+            "lanes": {
+                "bf16": {"tokens": cont["tokens"],
+                         "decode_hbm_bytes": b_bf16},
+                "quant": {"tokens": cont["tokens"],
+                          "decode_hbm_bytes": b_quant},
+            },
+            "decode_hbm_ratio": ratio,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {args.json}")
+
+
 def dry_run(args) -> None:
     """CI smoke: invariants + bucket-plan dispatch, zero timing gates."""
     from repro.core import (
@@ -269,6 +377,25 @@ def dry_run(args) -> None:
           f"{faults.describe()} (injected {fstats.faults_injected}, "
           f"preemptions {fstats.preemptions}), completed streams bitwise "
           f"identical, allocator restored")
+
+    # the quant planning contract on the same GEMMs: the accuracy-gated
+    # quant axis annotates every forward row and decode bucket, and the
+    # analytic decode traffic of a quantized verdict is strictly below the
+    # bf16 plan's at the same bucket
+    qplan = autotune_plan(model_gemms(cfg, tokens=64), measure=False,
+                          decode_buckets=buckets,
+                          epilogue=model_epilogues(cfg),
+                          quant=("int8", "fp8"))
+    assert qplan.has_quant(buckets), "quant tuning left a verdict missing"
+    quantized = sum(gp.qdtype in ("int8", "fp8")
+                    for lp in qplan.layers
+                    for gp in lp.decode.values())
+    assert quantized >= 1, "no decode sub-plan quantized at smoke scale"
+    b0 = decode_gemm_hbm_bytes(plan, {b: 1 for b in buckets})
+    b1 = decode_gemm_hbm_bytes(qplan, {b: 1 for b in buckets})
+    assert b1 < b0, (b1, b0)
+    print(f"quant plan OK: {quantized} quantized decode verdicts, analytic "
+          f"decode HBM {b1}/{b0} = {b1 / b0:.2f}x bf16")
     print("dry-run OK")
 
 
@@ -298,10 +425,18 @@ def main() -> None:
                     help="tiny workload, invariants + bucket-plan dispatch "
                          "+ fault-degradation contract asserted, no timing "
                          "(CI smoke)")
+    ap.add_argument("--quant", nargs="?", const="int8,fp8", default="",
+                    help="measure the quant serving lane instead: one "
+                         "scheduler replay plus the analytic decode-GEMM "
+                         "HBM economics of the accuracy-gated quant plan "
+                         "vs bf16 (bare flag = 'int8,fp8')")
     args = ap.parse_args()
 
     if args.dry_run:
         dry_run(args)
+        return
+    if args.quant:
+        quant_bench(args)
         return
 
     from repro.launch.scheduler import poisson_trace, serve_buckets

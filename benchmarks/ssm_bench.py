@@ -81,7 +81,8 @@ def bench_prefill(shape, iters: int, interpret: bool) -> dict:
             run = lambda s=sweep: flex_scan(
                 r, k, v, lw, None, chunk=chunk, sweep=s,
                 post_update=shape.post_update, interpret=interpret)[0]
-            cost = scan_traffic_bytes(shape, sweep, chunk)
+            cost = scan_traffic_bytes(shape, sweep, chunk,
+                                      in_bytes=2, out_bytes=2)
             bits[sweep] = np.asarray(run()).tobytes()
             row[sweep] = {
                 "chunk": chunk,
@@ -122,7 +123,8 @@ def bench_decode(shape, buckets, iters: int, interpret: bool) -> dict:
                                    atol=2e-5, rtol=2e-5)
         row = {}
         for kind, run in (("fused", fused), ("einsum", einsum)):
-            cost = scan_decode_traffic_bytes(shape, kind, b)
+            cost = scan_decode_traffic_bytes(shape, kind, b,
+                                             in_bytes=2, out_bytes=2)
             row[kind] = {
                 "walltime_s": _time(lambda r_=run: r_(*args), iters),
                 "hbm_bytes": cost.hbm_bytes,

@@ -12,6 +12,12 @@ history:
 * ``streamed`` forces every decision's strip to 1, i.e. the pre-v4 WS/IS
   schedules whose partial sums round-trip through HBM.
 
+A quant-columns section reports, per layer, the accuracy-gate calibration
+errors for int8/fp8, the CMU's analytic verdict, and the fwd HBM bytes a
+quantized weight stream would move vs bf16 (the dispatched train plan stays
+full precision — quantized training fwd would shift the grad-check
+tolerances).
+
 On CPU the kernels run in Pallas interpret mode, so walltimes are dispatch
 sanity checks, not TPU performance; the HBM-bytes columns are the
 analytical estimates the CMU ranks with, and ``--verify-traffic`` asserts
@@ -182,11 +188,12 @@ def strip_showcase(shapes: list[GemmShape] = STRIP_SHOWCASE) -> list[dict]:
 
     rows = []
     for g in shapes:
+        # no quant axis here: candidates are 5-tuples with qdtype = None
         ranked = _ranked_candidates(g, VMEM_BUDGET_BYTES)
 
         def entry(pred):
-            t, df, blk, strip = next(r for r in ranked if pred(*r))
-            cost = hbm_traffic_bytes(g, df, *blk, strip=strip)
+            t, df, blk, strip, _qd = next(r for r in ranked if pred(*r))
+            cost = hbm_traffic_bytes(g, df, *blk, in_bytes=2, strip=strip)
             kb = -(-g.K // blk[1])
             partials = ((2 * kb - 2) * g.M * g.N * 4
                         if df is not Dataflow.OS and strip == 1 and kb > 1
@@ -197,10 +204,40 @@ def strip_showcase(shapes: list[GemmShape] = STRIP_SHOWCASE) -> list[dict]:
 
         rows.append({
             "gemm": [g.M, g.K, g.N], "name": g.name,
-            "best": entry(lambda t, df, blk, s: True),
+            "best": entry(lambda t, df, blk, s, qd: True),
             "best_streamed_wsis": entry(
-                lambda t, df, blk, s: s == 1 and df is not Dataflow.OS),
-            "best_os": entry(lambda t, df, blk, s: df is Dataflow.OS),
+                lambda t, df, blk, s, qd: s == 1 and df is not Dataflow.OS),
+            "best_os": entry(lambda t, df, blk, s, qd: df is Dataflow.OS),
+        })
+    return rows
+
+
+def quant_rows(gemms: list[GemmShape],
+               dtypes: tuple[str, ...] = ("int8", "fp8")) -> list[dict]:
+    """Quant columns: per layer, the accuracy-gate calibration error of each
+    candidate dtype, the CMU's analytic verdict (qdtype — "bf16" means gated
+    out or a traffic loss), and fwd HBM bytes at the chosen geometry with
+    bf16 operands vs the quantized weight (1 B/element + the f32 per-channel
+    scale streamed alongside)."""
+    from repro.core import autotune_plan
+    from repro.core.cmu import QUANT_ERROR_BUDGET, measure_quant_error
+
+    plan = autotune_plan(gemms, measure=False, quant=dtypes)
+    rows = []
+    for lp in plan.layers:
+        blk = lp.block or DEFAULT_BLOCK
+        base = hbm_traffic_bytes(lp.gemm, lp.dataflow, *blk, in_bytes=2,
+                                 strip=lp.strip).hbm_bytes
+        quant = hbm_traffic_bytes(lp.gemm, lp.dataflow, *blk, strip=lp.strip,
+                                  a_bytes=2, b_bytes=1, scale_bytes=4).hbm_bytes
+        rows.append({
+            "name": lp.name,
+            "gemm": [lp.gemm.M, lp.gemm.K, lp.gemm.N],
+            "qdtype": lp.qdtype, "qerror": lp.qerror,
+            "gate_errors": {qd: measure_quant_error(lp.gemm, qd)
+                            for qd in dtypes},
+            "budget": QUANT_ERROR_BUDGET,
+            "fwd_hbm_bytes": {"bf16": base, "quant": quant},
         })
     return rows
 
@@ -268,16 +305,27 @@ def verify_traffic(shapes: list[GemmShape]) -> int:
                 exact = all(d >= 2 * b for d, b in
                             zip((padded.M, padded.K, padded.N), blk))
                 for strip in strips:
-                    walk = fk.schedule_cost_bytes(df, g.M, g.K, g.N, blk,
-                                                  strip=strip, in_bytes=4,
-                                                  out_bytes=4)
-                    model = hbm_traffic_bytes(padded, df, bm, bk, bn,
-                                              in_bytes=4, strip=strip).hbm_bytes
-                    if exact:
-                        assert walk == model, (g, df, blk, strip, walk, model)
-                    else:
-                        assert walk <= model, (g, df, blk, strip, walk, model)
-                    checked += 1
+                    # (4, 4): both operands f32.  (4, 1): the quantized
+                    # schedule — a 1-byte weight streamed against f32
+                    # activations; the f32 per-channel scale rides the
+                    # epilogue stream and is outside both models by the
+                    # same contract as bias/residual (scale_bytes=0 here).
+                    for ab, bb in ((4, 4), (4, 1)):
+                        walk = fk.schedule_cost_bytes(df, g.M, g.K, g.N, blk,
+                                                      strip=strip, in_bytes=4,
+                                                      out_bytes=4, a_bytes=ab,
+                                                      b_bytes=bb)
+                        model = hbm_traffic_bytes(padded, df, bm, bk, bn,
+                                                  in_bytes=4, strip=strip,
+                                                  a_bytes=ab,
+                                                  b_bytes=bb).hbm_bytes
+                        if exact:
+                            assert walk == model, (
+                                g, df, blk, strip, ab, bb, walk, model)
+                        else:
+                            assert walk <= model, (
+                                g, df, blk, strip, ab, bb, walk, model)
+                        checked += 1
     return checked
 
 
@@ -391,6 +439,16 @@ def main() -> None:
           f"vs streamed {strips['forced_streamed']:,} "
           f"({strips['forced_streamed'] / strips['plan_strips']:.2f}x)")
 
+    qrows = quant_rows(gemms)
+    print("quant columns (accuracy gate + analytical fwd HBM bytes):")
+    for row in qrows:
+        errs = " ".join(f"{qd}={e:.4f}" for qd, e in row["gate_errors"].items())
+        fb = row["fwd_hbm_bytes"]
+        print(f"  {row['name']:8} verdict {row['qdtype']:>5} "
+              f"(gate {errs}, budget {row['budget']}) "
+              f"fwd HBM bf16 {fb['bf16']:>12,} B -> quant {fb['quant']:>12,} B "
+              f"({fb['quant'] / fb['bf16']:.2f}x)")
+
     showcase = strip_showcase()
     print("strip showcase (training-scale shapes, analytical HBM bytes):")
     for row in showcase:
@@ -440,6 +498,7 @@ def main() -> None:
             "walltime_s": {"pallas": tp, "pallas_streamed": ts,
                            "pallas_copy_bwd": tc, "xla": tr},
             "hbm_bytes_est": {**hbm, **strips},
+            "quant": qrows,
             "strip_showcase": showcase,
             "mesh_composition": mrows,
         }

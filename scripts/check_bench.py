@@ -4,7 +4,9 @@ against its schema, hand-rolled (no jsonschema dependency).
 Each benchmark driver owns a record shape; this script pins it so a schema
 drift (a renamed key, a dropped section, a speedup that silently went below
 1x) fails CI instead of rotting in the repo.  A ``BENCH_*.json`` file with
-no registered schema is an error: new benchmarks must register here.
+no registered schema is an error: new benchmarks register by adding one
+``Bench`` row to the ``BENCHES`` table (schema + optional cross-field
+checks) — nothing else to wire.
 
   PYTHONPATH=src python scripts/check_bench.py
 """
@@ -15,6 +17,7 @@ import glob
 import json
 import os
 import sys
+from typing import Callable, NamedTuple
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -91,9 +94,30 @@ TRAIN_STEP_SCHEMA = Schema({
                    "pallas_copy_bwd": positive, "xla": positive},
     "hbm_bytes_est": {"bwd_transpose_free": positive, "bwd_via_copy": positive,
                       "plan_strips": positive, "forced_streamed": positive},
+    "quant": nonempty_list,
     "strip_showcase": nonempty_list,
     "mesh_composition": (list, None),
 })
+
+
+def extra_train_step_checks(rec) -> list[str]:
+    """Per-layer quant columns: verdicts and gate errors must be coherent."""
+    errors = []
+    for row in rec["quant"]:
+        name = row.get("name", "?")
+        if row.get("qdtype") not in ("int8", "fp8", "bf16"):
+            errors.append(f"quant[{name}]: verdict {row.get('qdtype')!r} is "
+                          "not a tuned outcome")
+        fb = row.get("fwd_hbm_bytes", {})
+        if fb.get("quant", 0) >= fb.get("bf16", 0):
+            errors.append(f"quant[{name}]: quantized fwd HBM bytes not below "
+                          "bf16 — the 1-byte weight stream saved nothing")
+        for qd, err in row.get("gate_errors", {}).items():
+            if row.get("qdtype") == qd and err > row.get("budget", 0):
+                errors.append(
+                    f"quant[{name}]: verdict {qd} but its gate error {err} "
+                    f"exceeds the budget {row.get('budget')}")
+    return errors
 
 _LANE = {"walltime_s": positive, "tokens": positive,
          "tokens_per_s": positive, "decode_steps": positive}
@@ -291,12 +315,90 @@ def extra_ssm_checks(rec) -> list[str]:
     return errors
 
 
-VALIDATORS = {
-    "BENCH_train_step.json": (TRAIN_STEP_SCHEMA, lambda rec: []),
-    "BENCH_serve.json": (SERVE_SCHEMA, extra_serve_checks),
-    "BENCH_attn.json": (ATTN_SCHEMA, extra_attn_checks),
-    "BENCH_ssm.json": (SSM_SCHEMA, extra_ssm_checks),
-}
+_QLANE = {"tokens": positive, "decode_hbm_bytes": positive}
+
+QUANT_SCHEMA = Schema({
+    "config": {"profile": str, "requests": positive, "slots": positive,
+               "prompt_len": list, "gen_len": list, "arrival_rate": float,
+               "seed": int,
+               "model": {"d_model": int, "d_ff": int, "num_layers": int,
+                         "vocab_size": int}},
+    "walltime_s": positive,
+    "tokens_per_s": positive,
+    "bucket_histogram": dict,
+    "quant": {"dtypes": nonempty_list, "budget": positive,
+              "verdicts": dict, "max_qerror": positive},
+    "lanes": {"bf16": _QLANE, "quant": _QLANE},
+    "decode_hbm_ratio": positive,
+})
+
+
+def extra_quant_checks(rec) -> list[str]:
+    """Cross-lane invariants: the quant lane must be the same workload as
+    the bf16 lane and actually buy decode bandwidth, and the accuracy-gate
+    metadata recorded with the plan must be coherent."""
+    errors = []
+    bf16, quant = rec["lanes"]["bf16"], rec["lanes"]["quant"]
+    if bf16["tokens"] != quant["tokens"]:
+        errors.append(
+            f"lanes decoded different token counts (bf16 {bf16['tokens']} "
+            f"vs quant {quant['tokens']}) — not the same workload")
+    if quant["decode_hbm_bytes"] >= bf16["decode_hbm_bytes"]:
+        errors.append(
+            f"quant decode HBM {quant['decode_hbm_bytes']:,} B is not below "
+            f"the bf16 lane's {bf16['decode_hbm_bytes']:,} B — quantization "
+            "bought nothing")
+    ratio = quant["decode_hbm_bytes"] / bf16["decode_hbm_bytes"]
+    if abs(rec["decode_hbm_ratio"] - ratio) > 1e-9:
+        errors.append(
+            f"decode_hbm_ratio {rec['decode_hbm_ratio']} disagrees with the "
+            f"lanes' quotient {ratio}")
+    if rec["decode_hbm_ratio"] > 0.6:
+        errors.append(
+            f"decode_hbm_ratio {rec['decode_hbm_ratio']:.3f} above the 0.6 "
+            "bar — a 1-byte weight stream should roughly halve decode GEMM "
+            "traffic at the bench profile")
+    q = rec["quant"]
+    if q["max_qerror"] > q["budget"]:
+        errors.append(
+            f"max_qerror {q['max_qerror']} exceeds the recorded budget "
+            f"{q['budget']} — a plan shipped past its own accuracy gate")
+    bad = set(q["dtypes"]) - {"int8", "fp8"}
+    if bad:
+        errors.append(f"unknown quant dtypes {sorted(bad)}")
+    bad = set(q["verdicts"]) - {"int8", "fp8", "bf16"}
+    if bad:
+        errors.append(f"unknown verdict dtypes {sorted(bad)}")
+    if not any(k in q["verdicts"] for k in ("int8", "fp8")):
+        errors.append(
+            f"no quantized verdicts in {q['verdicts']} — every layer fell "
+            "back to bf16 at the bench profile")
+    buckets = {int(b) for b in rec["bucket_histogram"]}
+    if any(b > rec["config"]["slots"] for b in buckets):
+        errors.append(
+            f"bucket histogram {sorted(buckets)} exceeds slot capacity "
+            f"{rec['config']['slots']}")
+    return errors
+
+
+class Bench(NamedTuple):
+    """One registered benchmark record: the filename it pins, its structural
+    schema, and optional cross-field checks the flat schema can't express."""
+
+    filename: str
+    schema: Schema
+    extra: Callable[[dict], list[str]] | None = None
+
+
+BENCHES = (
+    Bench("BENCH_train_step.json", TRAIN_STEP_SCHEMA, extra_train_step_checks),
+    Bench("BENCH_serve.json", SERVE_SCHEMA, extra_serve_checks),
+    Bench("BENCH_attn.json", ATTN_SCHEMA, extra_attn_checks),
+    Bench("BENCH_ssm.json", SSM_SCHEMA, extra_ssm_checks),
+    Bench("BENCH_quant.json", QUANT_SCHEMA, extra_quant_checks),
+)
+
+VALIDATORS = {b.filename: b for b in BENCHES}
 
 
 def main() -> int:
@@ -307,19 +409,19 @@ def main() -> int:
         return 1
     for path in paths:
         name = os.path.basename(path)
-        if name not in VALIDATORS:
-            errors.append(f"{name}: no schema registered in check_bench.py")
+        bench = VALIDATORS.get(name)
+        if bench is None:
+            errors.append(f"{name}: no Bench row registered in check_bench.py")
             continue
-        schema, extra = VALIDATORS[name]
         try:
             with open(path) as f:
                 rec = json.load(f)
         except json.JSONDecodeError as e:
             errors.append(f"{name}: invalid JSON — {e}")
             continue
-        errs = schema.errors(rec)
-        if not errs:
-            errs = [f"{name}: {msg}" for msg in extra(rec)]
+        errs = bench.schema.errors(rec)
+        if not errs and bench.extra is not None:
+            errs = [f"{name}: {msg}" for msg in bench.extra(rec)]
         else:
             errs = [f"{name}: {msg}" for msg in errs]
         errors += errs

@@ -251,7 +251,15 @@ class GemmPlan:
     GEMMs, or ``(False, False)`` when the copy-based fallback measured
     faster.  ``strip`` is the WS/IS accumulator-strip depth: 1 streams
     partial sums through HBM (the pre-v4 schedule, and the only OS value);
-    >= 2 pins a VMEM-resident strip so partials never leave the chip."""
+    >= 2 pins a VMEM-resident strip so partials never leave the chip.
+
+    ``qdtype`` is the operand-precision decision (v9): ``None`` = the plan
+    predates quant tuning (v1–v8) or quant was never requested; ``"bf16"``
+    = quant was searched and rejected (accuracy gate failed, or the
+    unquantized candidate measured faster); ``"int8"`` / ``"fp8"`` = the
+    dispatch quantizes the weight per output channel.  ``qerror`` records
+    the measured calibration error of the chosen quantized dtype (None for
+    unquantized picks)."""
 
     dataflow: Dataflow
     block: tuple[int, int, int] | None
@@ -259,6 +267,8 @@ class GemmPlan:
     source: str = "analytical"  # "analytical" | "measured"
     trans: tuple[bool, bool] = NO_TRANS
     strip: int = 1
+    qdtype: str | None = None
+    qerror: float | None = None
 
     def to_row(self) -> dict:
         return {
@@ -268,6 +278,8 @@ class GemmPlan:
             "source": self.source,
             "trans": list(self.trans),
             "strip": self.strip,
+            "qdtype": self.qdtype,
+            "qerror": self.qerror,
         }
 
     @classmethod
@@ -283,6 +295,8 @@ class GemmPlan:
             source=row.get("source", "analytical"),
             trans=tuple(bool(t) for t in trans) if trans else NO_TRANS,
             strip=int(row.get("strip") or 1),
+            qdtype=row.get("qdtype"),
+            qerror=row.get("qerror"),
         )
 
 
@@ -365,6 +379,12 @@ class LayerPlan:
     # carried only by the ``SCAN_ANCHOR`` row.  None = plan predates scan
     # scheduling (v1–v7) or was tuned without a scan shape.
     scan: ScanPlan | None = None
+    # forward operand-precision decision (v9), mirroring ``GemmPlan.qdtype``:
+    # None = plan predates quant tuning (v1–v8) or quant was never requested,
+    # "bf16" = quant searched and rejected, "int8"/"fp8" = the forward
+    # dispatch quantizes the weight per output channel.
+    qdtype: str | None = None
+    qerror: float | None = None
 
     def decode_plan(self, m: int) -> GemmPlan | None:
         """The decode sub-plan for an ``m``-row dispatch: the smallest tuned
@@ -455,6 +475,23 @@ class DataflowPlan:
         lp = self.get(SCAN_ANCHOR)
         return lp.scan if lp is not None else None
 
+    def has_quant(self, buckets: tuple[int, ...] = ()) -> bool:
+        """True when every layer (and every requested decode bucket) carries
+        a quant verdict — the bar a plan must clear before it can drive
+        ``--quant`` without re-tuning.  A "bf16" verdict counts: quant was
+        searched and rejected by the accuracy gate or the ranking, which is
+        a decision, not an omission."""
+        if not self.layers:
+            return False
+        for l in self.layers:
+            if l.qdtype is None:
+                return False
+            for b in buckets:
+                gp = (l.decode or {}).get(b)
+                if gp is None or gp.qdtype is None:
+                    return False
+        return True
+
     def to_json(self) -> str:
         return json.dumps(
             [
@@ -475,6 +512,8 @@ class DataflowPlan:
                     if l.decode else None,
                     "attention": l.attention.to_row() if l.attention else None,
                     "scan": l.scan.to_row() if l.scan else None,
+                    "qdtype": l.qdtype,
+                    "qerror": l.qerror,
                 }
                 for l in self.layers
             ],
@@ -504,6 +543,8 @@ class DataflowPlan:
                     if dec else None,
                     attention=AttnPlan.from_row(row.get("attention")),
                     scan=ScanPlan.from_row(row.get("scan")),
+                    qdtype=row.get("qdtype"),
+                    qerror=row.get("qerror"),
                 )
             )
         return plan
@@ -573,6 +614,7 @@ def measure_kernel(
     trans: tuple[bool, bool] = NO_TRANS,
     via_copy: bool = False,
     strip: int = 1,
+    qdtype: str | None = None,
 ) -> float:
     """Walltime (s) of one real kernel execution of ``gemm`` under
     (dataflow, block, strip) — interpret mode on CPU, on-device on TPU.
@@ -593,6 +635,12 @@ def measure_kernel(
 
     ``strip`` times the WS/IS two-level schedule (VMEM-resident accumulator
     strip); 1 is the streamed schedule.
+
+    ``qdtype`` ("int8" / "fp8") times the weight-quantized variant: the
+    per-channel quantize runs inside the timed region (it is part of the
+    dispatch) and the kernel streams the 1-byte operand with the fused
+    dequant epilogue.  Quantized timing is forward-only (``trans`` must be
+    ``NO_TRANS``).
     """
     import time
 
@@ -610,6 +658,8 @@ def measure_kernel(
             "epilogue timing is for forward GEMMs, which never run "
             "transposed — drop epilogue or trans/via_copy"
         )
+    if qdtype is not None and (trans != NO_TRANS or via_copy):
+        raise ValueError("quantized timing is forward-only (trans=NO_TRANS)")
     trans_a, trans_b = trans
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (gemm.K, gemm.M) if trans_a else (gemm.M, gemm.K),
@@ -622,6 +672,7 @@ def measure_kernel(
         run = lambda: ops.flex_linear(
             x, w, b, activation=sig.activation, residual=res,
             dataflow=dataflow, block=block, interpret=interpret, strip=strip,
+            qdtype=qdtype,
         )
     elif via_copy:
         # eager .T executes an HBM transpose copy on every timed call
@@ -632,7 +683,7 @@ def measure_kernel(
     else:
         run = lambda: ops.flex_matmul(
             x, w, dataflow=dataflow, block=block, interpret=interpret,
-            trans_a=trans_a, trans_b=trans_b, strip=strip,
+            trans_a=trans_a, trans_b=trans_b, strip=strip, qdtype=qdtype,
         )
     for _ in range(warmup):
         run().block_until_ready()
@@ -659,9 +710,50 @@ def bwd_gemms(gemm: GemmShape) -> tuple[GemmShape, GemmShape]:
     )
 
 
+# Default accuracy budget for the quant gate: a quantized dtype is only
+# eligible when its measured calibration error (relative RMS of the layer's
+# output vs full precision) stays under this bound.  int8 per-channel lands
+# around 0.8% on Gaussian weights, fp8(e4m3) around 3% — the default admits
+# both; tighten it (``--quant-budget`` / ``quant_budget=``) to force int8-only
+# or full bf16 fallback.
+QUANT_ERROR_BUDGET = 0.05
+
+# Analytical per-operand byte widths of a weight-quantized candidate: the
+# activation stays bf16, the weight streams at 1 byte/element, and the
+# per-output-channel f32 scale rides the epilogue (folded into the B term of
+# the traffic model so stationarity re-fetch factors multiply it).
+_QUANT_TRAFFIC = dict(a_bytes=2, b_bytes=1, scale_bytes=4)
+
+
+def measure_quant_error(gemm: GemmShape, qdtype: str) -> float:
+    """Calibration error of quantizing ``gemm``'s weight to ``qdtype``:
+    relative RMS of ``x @ dequant(quantize(w))`` against ``x @ w`` on a
+    deterministic probe batch (16 rows, weight columns subsampled to 512).
+
+    This is the accuracy gate's oracle — a module global, like
+    ``measure_kernel``, so tests can substitute a fake (e.g. force a layer
+    over budget and assert the recorded fallback).  Deterministic by
+    construction: seeded PRNG, shapes only from ``gemm`` — the same
+    (K, N, qdtype) always scores the same error.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.quantize import dequantize_channel, quantize_channel
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    n = min(gemm.N, 512)
+    x = jax.random.normal(kx, (16, gemm.K), jnp.float32)
+    w = jax.random.normal(kw, (gemm.K, n), jnp.float32)
+    ref = x @ w
+    out = x @ dequantize_channel(*quantize_channel(w, qdtype, axis=0))
+    err = jnp.linalg.norm(out - ref) / (jnp.linalg.norm(ref) + 1e-12)
+    return float(err)
+
+
 def _ranked_candidates(
-    gemm: GemmShape, vmem_limit: int
-) -> list[tuple[float, Dataflow, tuple[int, int, int], int]]:
+    gemm: GemmShape, vmem_limit: int, quant: tuple[str, ...] = ()
+) -> list[tuple[float, Dataflow, tuple[int, int, int], int, str | None]]:
     """All VMEM-feasible (dataflow, block, strip) configs, best analytical
     first.
 
@@ -675,6 +767,13 @@ def _ranked_candidates(
     already resident; the wider-accumulator OS *is* the IS strip schedule).
     The M-axis candidates include the sublane-aligned skinny blocks so
     decode-geometry GEMMs (M <= 32) are not forced to pad to 128 rows.
+
+    ``quant`` adds a fourth axis: for each qdtype that already passed the
+    accuracy gate (callers pre-filter — ranking never decides accuracy),
+    every schedule is re-costed with the weight at 1 byte/element plus the
+    f32 per-channel scale.  Pass the eligible dtypes sorted by calibration
+    error: the sort is stable, so when two 1-byte dtypes tie on traffic the
+    lower-error one ranks first.
     """
     ranked = []
     for df in ALL_DATAFLOWS:
@@ -684,17 +783,22 @@ def _ranked_candidates(
                     for strip in strip_candidates(
                         strip_blocks(gemm, df, bm, bn)
                     ):
-                        cost = hbm_traffic_bytes(gemm, df, bm, bk, bn,
-                                                 strip=strip)
-                        if cost.vmem_bytes <= vmem_limit:
-                            ranked.append(
-                                (cost.time_s(), cost.hbm_bytes, df,
-                                 (bm, bk, bn), strip)
-                            )
+                        for qd in (None, *quant):
+                            # explicit per-operand widths — the byte model
+                            # must not fall back to a silent dtype default
+                            kw = (_QUANT_TRAFFIC if qd
+                                  else dict(a_bytes=2, b_bytes=2))
+                            cost = hbm_traffic_bytes(gemm, df, bm, bk, bn,
+                                                     strip=strip, **kw)
+                            if cost.vmem_bytes <= vmem_limit:
+                                ranked.append(
+                                    (cost.time_s(), cost.hbm_bytes, df,
+                                     (bm, bk, bn), strip, qd)
+                                )
     # roofline ties (compute-bound shapes) break toward less HBM traffic —
     # same walltime, less bandwidth and energy
     ranked.sort(key=lambda t: (t[0], t[1]))
-    return [(t, df, blk, strip) for t, _, df, blk, strip in ranked]
+    return [(t, df, blk, strip, qd) for t, _, df, blk, strip, qd in ranked]
 
 
 def _tune_gemm(
@@ -707,6 +811,8 @@ def _tune_gemm(
     interpret: bool,
     epilogue: "bool | EpilogueSig",
     trans: tuple[bool, bool] = NO_TRANS,
+    quant: tuple[str, ...] = (),
+    quant_budget: float | None = None,
 ) -> GemmPlan:
     """Tune one GEMM: analytical pruning over the (dataflow, block, strip)
     space, then real-execution timing of the ``top_k`` survivors (falls
@@ -721,32 +827,53 @@ def _tune_gemm(
     pre-transposed operands) never saw.  Analytically the zero-copy variant
     strictly dominates (same kernel traffic, minus the copy), so it is the
     pick whenever measurement is off.
+
+    ``quant`` requests weight-quantized candidates ("int8"/"fp8").  The
+    accuracy gate runs first — ``measure_quant_error`` scores each dtype
+    and only those under ``quant_budget`` (default ``QUANT_ERROR_BUDGET``)
+    enter the ranking; the gate runs even under ``measure=False``, because
+    accuracy is a numerical property, not a timing one.  When quant was
+    requested the returned plan always records a verdict: the winning
+    quantized dtype (with its ``qerror``), or ``qdtype="bf16"`` when every
+    dtype failed the gate or lost the ranking — so a cached plan can prove
+    quant was considered, not merely absent.
     """
-    ranked = _ranked_candidates(gemm, vmem_limit)
+    budget = QUANT_ERROR_BUDGET if quant_budget is None else quant_budget
+    eligible: tuple[str, ...] = ()
+    qerrs: dict[str, float] = {}
+    if quant and trans == NO_TRANS:
+        qerrs = {qd: measure_quant_error(gemm, qd) for qd in quant}
+        eligible = tuple(sorted((qd for qd in quant if qerrs[qd] <= budget),
+                                key=lambda qd: qerrs[qd]))
+    ranked = _ranked_candidates(gemm, vmem_limit, quant=eligible)
     if not ranked:
         raise ValueError(f"no (dataflow, block, strip) fits VMEM for {gemm}")
+    fallback = "bf16" if quant else None
     measurable = measure and not (interpret and gemm.macs > MAX_INTERPRET_MACS)
     if measurable:
         timed = []
-        for _, df, blk, strip in ranked[:top_k]:
+        for _, df, blk, strip, qd in ranked[:top_k]:
             timed.append(
                 (measure_kernel(gemm, df, blk, iters=iters, interpret=interpret,
-                                epilogue=epilogue, trans=trans, strip=strip),
-                 trans, df, blk, strip)
+                                epilogue=epilogue, trans=trans, strip=strip,
+                                qdtype=qd),
+                 trans, df, blk, strip, qd)
             )
             if trans != NO_TRANS:
                 timed.append(
                     (measure_kernel(gemm, df, blk, iters=iters,
                                     interpret=interpret, trans=trans,
                                     via_copy=True, strip=strip),
-                     NO_TRANS, df, blk, strip)
+                     NO_TRANS, df, blk, strip, qd)
                 )
-        cost, tr, df, blk, strip = min(timed, key=lambda t: t[0])
+        cost, tr, df, blk, strip, qd = min(timed, key=lambda t: t[0])
         return GemmPlan(dataflow=df, block=blk, est_cost=cost,
-                        source="measured", trans=tr, strip=strip)
-    cost, df, blk, strip = ranked[0]
+                        source="measured", trans=tr, strip=strip,
+                        qdtype=qd or fallback, qerror=qerrs.get(qd))
+    cost, df, blk, strip, qd = ranked[0]
     return GemmPlan(dataflow=df, block=blk, est_cost=cost,
-                    source="analytical", trans=trans, strip=strip)
+                    source="analytical", trans=trans, strip=strip,
+                    qdtype=qd or fallback, qerror=qerrs.get(qd))
 
 
 def mesh_local_gemm(gemm: GemmShape, mesh_df: Dataflow, tp: int,
@@ -977,7 +1104,10 @@ def _tune_attention(
                 if eff in seen:
                     continue
                 seen.add(eff)
-                cost = attn_traffic_bytes(shape, sweep, bq, bk)
+                # explicit widths: attention streams bf16 activations + KV
+                # cache (weight quantization never touches these operands)
+                cost = attn_traffic_bytes(shape, sweep, bq, bk,
+                                          in_bytes=2, out_bytes=2)
                 if cost.vmem_bytes <= vmem_limit:
                     ranked.append(
                         (cost.time_s(), cost.hbm_bytes, sweep, (bq, bk)))
@@ -1026,7 +1156,8 @@ def _tune_attn_decode(
     for b in sorted(set(buckets)):
         ranked = []
         for kind in ATTN_DECODE_KINDS:
-            cost = attn_decode_traffic_bytes(shape, kind, b)
+            cost = attn_decode_traffic_bytes(shape, kind, b,
+                                             in_bytes=2, out_bytes=2)
             if cost.vmem_bytes <= vmem_limit:
                 ranked.append((cost.time_s(), cost.hbm_bytes, kind))
         ranked.sort(key=lambda t: (t[0], t[1]))
@@ -1184,7 +1315,9 @@ def _tune_scan(
             if eff in seen:
                 continue
             seen.add(eff)
-            cost = scan_traffic_bytes(shape, sweep, chunk)
+            # explicit widths: the scan streams bf16 activations/state
+            cost = scan_traffic_bytes(shape, sweep, chunk,
+                                      in_bytes=2, out_bytes=2)
             if cost.vmem_bytes <= vmem_limit:
                 ranked.append((cost.time_s(), cost.hbm_bytes, sweep, chunk))
     if not ranked:
@@ -1232,7 +1365,8 @@ def _tune_scan_decode(
     for b in sorted(set(buckets)):
         ranked = []
         for kind in SCAN_DECODE_KINDS:
-            cost = scan_decode_traffic_bytes(shape, kind, b)
+            cost = scan_decode_traffic_bytes(shape, kind, b,
+                                             in_bytes=2, out_bytes=2)
             if cost.vmem_bytes <= vmem_limit:
                 ranked.append((cost.time_s(), cost.hbm_bytes, kind))
         ranked.sort(key=lambda t: (t[0], t[1]))
@@ -1266,6 +1400,8 @@ def autotune_plan(
     decode_buckets: tuple[int, ...] | None = None,
     attn: AttnShape | None = None,
     scan: ScanShape | None = None,
+    quant: tuple[str, ...] | None = None,
+    quant_budget: float | None = None,
 ) -> DataflowPlan:
     """Measured-autotune CMU: analytical pruning + real-execution timing.
 
@@ -1318,6 +1454,16 @@ def autotune_plan(
     when ``decode_buckets`` is also given — the per-bucket decode-scan
     kind (fused Pallas step kernel vs jnp recurrence), under the same
     flow and budget as attention.
+
+    With ``quant`` (a tuple of "int8"/"fp8") the forward rows and decode
+    sub-plans additionally search **weight-quantized candidates**: each
+    requested dtype is accuracy-gated per layer (``measure_quant_error``
+    vs ``quant_budget``, default ``QUANT_ERROR_BUDGET``) before entering
+    the ranking, and every row records its verdict in ``qdtype`` /
+    ``qerror`` — a quantized winner, or "bf16" when quant lost or failed
+    the gate.  Backward and mesh sub-plans never quantize: gradients flow
+    through the saved full-precision weight (straight-through), and the
+    sharded dispatch has no quantized path.
     """
     if interpret is None:
         from repro.kernels import ops
@@ -1325,10 +1471,11 @@ def autotune_plan(
         interpret = ops.default_interpret()
     kw = dict(vmem_limit=vmem_limit, top_k=top_k, measure=measure,
               iters=iters, interpret=interpret)
+    qkw = dict(quant=tuple(quant or ()), quant_budget=quant_budget)
     plan = DataflowPlan(mesh=mesh)
     for gemm in gemms:
         sig = epilogue.get(gemm.name) if isinstance(epilogue, dict) else epilogue
-        fwd = _tune_gemm(gemm, epilogue=sig or False, **kw)
+        fwd = _tune_gemm(gemm, epilogue=sig or False, **qkw, **kw)
         dx = dw = None
         if train:
             g_dx, g_dw = bwd_gemms(gemm)
@@ -1341,7 +1488,7 @@ def autotune_plan(
         dec = None
         if decode_buckets:
             dec = _tune_decode(gemm, tuple(decode_buckets),
-                               epilogue=sig or False, **kw)
+                               epilogue=sig or False, **qkw, **kw)
         ap = None
         if attn is not None and gemm.name == ATTN_ANCHOR:
             ap = _tune_attention(attn, tuple(decode_buckets or ()) or None,
@@ -1353,7 +1500,8 @@ def autotune_plan(
             LayerPlan(name=gemm.name, gemm=gemm, dataflow=fwd.dataflow,
                       est_cost=fwd.est_cost, block=fwd.block, source=fwd.source,
                       bwd_dx=dx, bwd_dw=dw, strip=fwd.strip, mesh=mp,
-                      decode=dec, attention=ap, scan=sp)
+                      decode=dec, attention=ap, scan=sp,
+                      qdtype=fwd.qdtype, qerror=fwd.qerror)
         )
     return plan
 
@@ -1557,6 +1705,109 @@ def add_scan_subplans(
     return out
 
 
+def _quant_choice(
+    gemm: GemmShape,
+    dataflow: Dataflow,
+    block: tuple[int, int, int] | None,
+    strip: int,
+    *,
+    quant: tuple[str, ...],
+    budget: float,
+    measure: bool,
+    iters: int,
+    interpret: bool,
+    epilogue: "bool | EpilogueSig" = False,
+) -> tuple[str, float | None]:
+    """Decide the qdtype for an **already-tuned geometry**: the incremental
+    upgrade's analogue of ``_tune_gemm``'s quant axis.  The accuracy gate
+    runs first; surviving dtypes are then compared against the unquantized
+    dispatch at the *same* (dataflow, block, strip) — timed when
+    measurement is on, by the dtype-aware traffic model otherwise — so the
+    upgrade never perturbs a cached schedule decision, only annotates it.
+    Returns ``(qdtype, qerror)`` with "bf16" when everything fails the gate
+    or loses."""
+    qerrs = {qd: measure_quant_error(gemm, qd) for qd in quant}
+    eligible = sorted((qd for qd in quant if qerrs[qd] <= budget),
+                      key=lambda qd: qerrs[qd])
+    if not eligible:
+        return "bf16", None
+    blk = block or (256, 256, 256)  # kernels' DEFAULT_BLOCK
+    measurable = measure and not (interpret and gemm.macs > MAX_INTERPRET_MACS)
+    if measurable:
+        timed = [
+            (measure_kernel(gemm, dataflow, blk, iters=iters,
+                            interpret=interpret, epilogue=epilogue,
+                            strip=strip, qdtype=qd), qd)
+            for qd in (None, *eligible)
+        ]
+        _, qd = min(timed, key=lambda t: t[0])
+    else:
+        bm, bk, bn = blk
+        base = hbm_traffic_bytes(gemm, dataflow, bm, bk, bn, strip=strip,
+                                 a_bytes=2, b_bytes=2)
+        qcost = hbm_traffic_bytes(gemm, dataflow, bm, bk, bn, strip=strip,
+                                  **_QUANT_TRAFFIC)
+        better = (qcost.time_s(), qcost.hbm_bytes) < (base.time_s(),
+                                                      base.hbm_bytes)
+        qd = eligible[0] if better else None
+    return (qd or "bf16"), qerrs.get(qd)
+
+
+def add_quant_subplans(
+    plan: DataflowPlan,
+    quant: tuple[str, ...],
+    *,
+    quant_budget: float | None = None,
+    epilogue: "bool | EpilogueSig | dict[str, EpilogueSig | None]" = False,
+    vmem_limit: int = VMEM_BUDGET_BYTES,
+    top_k: int = 3,
+    measure: bool = True,
+    iters: int = 2,
+    interpret: bool | None = None,
+    **_ignored,
+) -> DataflowPlan:
+    """Upgrade a plan with quant verdicts **incrementally**: every existing
+    decision — forward (dataflow, block, strip, trans, est_cost), backward,
+    mesh, decode, attention and scan sub-plans — is kept **verbatim** (a
+    migrated v1–v8 cache keeps dispatching bit-for-bit), and only the
+    missing ``qdtype`` / ``qerror`` annotations are decided: per forward
+    row and per decode bucket, each at its already-tuned geometry
+    (``_quant_choice``).  Rows that already carry a verdict are passed
+    through untouched, so re-running with the same dtypes is a no-op."""
+    import dataclasses
+
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    del vmem_limit, top_k  # geometry is frozen — nothing to re-search
+    kw = dict(quant=tuple(quant), measure=measure, iters=iters,
+              interpret=interpret,
+              budget=QUANT_ERROR_BUDGET if quant_budget is None
+              else quant_budget)
+    out = DataflowPlan(mesh=plan.mesh)
+    for l in plan.layers:
+        sig = epilogue.get(l.name) if isinstance(epilogue, dict) else epilogue
+        new = l
+        if l.qdtype is None:
+            qd, qe = _quant_choice(l.gemm, l.dataflow, l.block, l.strip,
+                                   epilogue=sig or False, **kw)
+            new = dataclasses.replace(new, qdtype=qd, qerror=qe)
+        if new.decode and any(gp.qdtype is None for gp in new.decode.values()):
+            dec = {}
+            for b, gp in new.decode.items():
+                if gp.qdtype is None:
+                    g = GemmShape(M=b, K=l.gemm.K, N=l.gemm.N,
+                                  name=f"{l.gemm.name}@b{b}")
+                    qd, qe = _quant_choice(g, gp.dataflow, gp.block, gp.strip,
+                                           epilogue=sig or False, **kw)
+                    gp = dataclasses.replace(gp, qdtype=qd, qerror=qe)
+                dec[b] = gp
+            new = dataclasses.replace(new, decode=dec)
+        out.layers.append(new)
+    return out
+
+
 def model_gemms(cfg, tokens: int) -> list[GemmShape]:
     """The per-layer GEMMs an LM config issues for one batch of ``tokens``.
 
@@ -1655,7 +1906,8 @@ def static_vs_flex_traffic(
     totals = {df.name: 0 for df in ALL_DATAFLOWS}
     flex = 0
     for g in gemms:
-        per = {df: hbm_traffic_bytes(g, df, bm, bk, bn).hbm_bytes for df in ALL_DATAFLOWS}
+        per = {df: hbm_traffic_bytes(g, df, bm, bk, bn, in_bytes=2).hbm_bytes
+               for df in ALL_DATAFLOWS}
         for df, v in per.items():
             totals[df.name] += v
         flex += min(per.values())

@@ -183,6 +183,10 @@ def hbm_traffic_bytes(
     in_bytes: int = 2,
     out_bytes: int = 4,
     strip: int = 1,
+    *,
+    a_bytes: int | None = None,
+    b_bytes: int | None = None,
+    scale_bytes: int = 0,
 ) -> KernelCost:
     """HBM traffic for a blocked matmul with block sizes (bm, bk, bn).
 
@@ -221,11 +225,25 @@ def hbm_traffic_bytes(
     ``strip=1`` is exactly the streamed schedule above; OS ignores
     ``strip`` (its accumulator is already VMEM-resident, and the strip
     generalisation of OS *is* the IS strip schedule).
+
+    **Per-operand dtypes.**  ``in_bytes`` is the legacy both-operands
+    width; quantized candidates instead pass ``a_bytes``/``b_bytes``
+    explicitly (weight-only quant: ``a_bytes=2, b_bytes=1``) plus
+    ``scale_bytes`` for the per-output-channel f32 scale row that streams
+    with the B operand — folded into the B term so every refetch factor
+    multiplies it too, and into the VMEM working set as one ``bn``-wide
+    row per resident B block.
     """
     M, K, N = shape.M, shape.K, shape.N
+    if a_bytes is None:
+        a_bytes = in_bytes
+    if b_bytes is None:
+        b_bytes = in_bytes
     Mb, Kb, Nb = _ceil_div(M, bm), _ceil_div(K, bk), _ceil_div(N, bn)
-    a, b, c = M * K * in_bytes, K * N * in_bytes, M * N * out_bytes
-    blocks_vmem = (bm * bk + bk * bn) * in_bytes
+    a = M * K * a_bytes
+    b = K * N * b_bytes + N * scale_bytes
+    c = M * N * out_bytes
+    blocks_vmem = bm * bk * a_bytes + bk * bn * b_bytes + bn * scale_bytes
     if dataflow is Dataflow.OS:
         hbm = Nb * a + Mb * b + c
         vmem = blocks_vmem + bm * bn * 4  # f32 accumulator
@@ -288,7 +306,7 @@ def best_kernel_dataflow(
     """Pick the dataflow minimising roofline time subject to VMEM fit."""
     candidates: list[tuple[float, Dataflow, KernelCost]] = []
     for df in ALL_DATAFLOWS:
-        cost = hbm_traffic_bytes(shape, df, bm, bk, bn)
+        cost = hbm_traffic_bytes(shape, df, bm, bk, bn, in_bytes=2)
         if cost.vmem_bytes <= vmem_limit:
             candidates.append((cost.time_s(), df, cost))
     if not candidates:
@@ -351,7 +369,8 @@ def tune_kernel_dataflow(
         for bm in blocks_for(shape.M):
             for bk in blocks_for(shape.K):
                 for bn in blocks_for(shape.N):
-                    cost = hbm_traffic_bytes(shape, df, bm, bk, bn)
+                    cost = hbm_traffic_bytes(shape, df, bm, bk, bn,
+                                             in_bytes=2)
                     if cost.vmem_bytes > vmem_limit:
                         continue
                     t = cost.time_s()

@@ -52,13 +52,20 @@ Schema versions (see docs/autotune.md for the full JSON shape):
     analogue of the v7 attention schedule (see docs/autotune.md).  Null /
     absent = no scan schedule tuned; the jnp chunked scan remains the
     dispatch, exactly the v7 behaviour.
+  * v9 — every forward row and decode sub-plan may carry ``qdtype`` /
+    ``qerror``, the operand-precision verdict: null = never quant-tuned
+    (every v1–v8 plan), "bf16" = quant searched and rejected (accuracy
+    gate or ranking), "int8"/"fp8" = the dispatch quantizes the weight per
+    output channel with the fused dequant epilogue, ``qerror`` recording
+    the gate's measured calibration error (see docs/autotune.md).
 
-Older files still **load and migrate**: v1–v7 files load with ``scan``
-None (v1–v6 also with ``attention`` None, v1–v5 with ``decode`` None,
-v1–v4 with ``mesh`` None), so their dispatch is bit-for-bit what it was —
-the scan, attention, decode-bucket and mesh axes only enter via
-incremental upgrades (``add_scan_subplans`` / ``add_attention_subplans``
-/ ``add_decode_subplans`` / ``add_mesh_subplans``, which keep every
+Older files still **load and migrate**: v1–v8 files load with ``qdtype``
+None (v1–v7 also with ``scan`` None, v1–v6 with ``attention`` None,
+v1–v5 with ``decode`` None, v1–v4 with ``mesh`` None), so their dispatch
+is bit-for-bit what it was — the quant, scan, attention, decode-bucket
+and mesh axes only enter via incremental upgrades (``add_quant_subplans``
+/ ``add_scan_subplans`` / ``add_attention_subplans`` /
+``add_decode_subplans`` / ``add_mesh_subplans``, which keep every
 existing decision verbatim) or a re-tune.  v1 rows are
 a strict subset (the
 backward sub-plans come back as None); v2 backward sub-plans — tuned on
@@ -100,14 +107,15 @@ from .cmu import (
     add_bwd_subplans,
     add_decode_subplans,
     add_mesh_subplans,
+    add_quant_subplans,
     add_scan_subplans,
     autotune_plan,
 )
 from .dist_dataflow import MeshSpec
 
-PLAN_CACHE_VERSION = 8
+PLAN_CACHE_VERSION = 9
 # older schemas this build can still read and migrate
-COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6, 7, 8)
+COMPATIBLE_VERSIONS = (1, 2, 3, 4, 5, 6, 7, 8, 9)
 
 _ACTIVE_PLAN: DataflowPlan | None = None
 
@@ -168,11 +176,12 @@ def load_plan(path: str) -> DataflowPlan:
 
 def _migrate_rows(layers: list[dict], version: int) -> int:
     """In-place v1/v2/v3 row migration; returns migrated field count.
-    v4–v7 rows need no edits: v5 through v8 only *add* optional fields
-    (the ``mesh`` sub-plan, the per-bucket ``decode`` sub-plans, and the
-    anchor rows' ``attention`` / ``scan`` schedules), which absent keys
-    already decode as None (single-device, unbucketed, jnp attention and
-    jnp chunked scan).
+    v4–v8 rows need no edits: v5 through v9 only *add* optional fields
+    (the ``mesh`` sub-plan, the per-bucket ``decode`` sub-plans, the
+    anchor rows' ``attention`` / ``scan`` schedules, and the ``qdtype`` /
+    ``qerror`` quant verdicts), which absent keys already decode as None
+    (single-device, unbucketed, jnp attention, jnp chunked scan, and
+    unquantized dispatch).
 
     v2 backward sub-plans were tuned timing *pre-transposed* operands, i.e.
     the copy-based path minus the copy — their (dataflow, block) stays valid
@@ -211,7 +220,8 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
                  mesh: MeshSpec | None = None,
                  buckets: tuple[int, ...] | None = None,
                  attn: AttnShape | None = None,
-                 scan: ScanShape | None = None) -> bool:
+                 scan: ScanShape | None = None,
+                 quant: tuple[str, ...] | None = None) -> bool:
     """True when the plan was tuned for exactly these (name, M, K, N) GEMMs —
     the guard against silently applying a cache tuned for another arch or
     batch geometry.  With ``require_bwd`` the plan must also carry backward
@@ -226,7 +236,11 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
     attention schedule covering the requested buckets (the ``attn_pallas``
     bar); an attention-tuned plan still matches a request without one.
     ``scan`` applies the same bar to the chunked-scan schedule on the
-    ``SCAN_ANCHOR`` row (the ``ssm_pallas`` bar)."""
+    ``SCAN_ANCHOR`` row (the ``ssm_pallas`` bar).  With ``quant`` every
+    layer (and requested decode bucket) must carry a quant verdict — a
+    "bf16" rejection counts, a v1–v8 null does not (the ``--quant`` bar);
+    a quant-annotated plan still matches an unquantized request, whose
+    dispatch simply ignores the annotations."""
     planned = {(l.name, l.gemm.M, l.gemm.K, l.gemm.N) for l in plan.layers}
     wanted = {(g.name, g.M, g.K, g.N) for g in gemms}
     if planned != wanted:
@@ -239,6 +253,8 @@ def plan_matches(plan: DataflowPlan, gemms, require_bwd: bool = False,
         return False
     if scan is not None and not plan.has_scan(tuple(buckets or ())):
         return False
+    if quant and not plan.has_quant(tuple(buckets or ())):
+        return False
     return plan.has_bwd() if require_bwd else True
 
 
@@ -246,7 +262,9 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                      mesh: MeshSpec | None = None,
                      buckets: tuple[int, ...] | None = None,
                      attn: AttnShape | None = None,
-                     scan: ScanShape | None = None, **autotune_kw):
+                     scan: ScanShape | None = None,
+                     quant: tuple[str, ...] | None = None,
+                     quant_budget: float | None = None, **autotune_kw):
     """Return ``(plan, loaded)`` — the cached plan when ``path`` exists and
     matches ``gemms``, otherwise a fresh autotune persisted to ``path``
     (when given).  A cache tuned for different GEMM shapes (other arch,
@@ -266,7 +284,11 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
     file) gains it via ``add_attention_subplans`` with every GEMM, mesh
     and decode decision kept verbatim, and to ``scan``: a cache without a
     chunked-scan schedule (a migrated v1–v7 file) gains it via
-    ``add_scan_subplans`` the same way.
+    ``add_scan_subplans`` the same way, and to ``quant``: a cache without
+    quant verdicts (a migrated v1–v8 file) gains only the ``qdtype`` /
+    ``qerror`` annotations via ``add_quant_subplans`` — every schedule
+    decision, including the geometries the quantized kernels run with,
+    is kept verbatim.
 
     Server-grade load hardening: a corrupt/truncated cache file, or one
     written by a *newer* build (a future schema version), must not kill the
@@ -288,11 +310,12 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
             )
             plan = autotune_plan(gemms, train=require_bwd, mesh=mesh,
                                  decode_buckets=buckets, attn=attn, scan=scan,
+                                 quant=quant, quant_budget=quant_budget,
                                  **autotune_kw)
             save_plan(path, plan)
             return plan, False
         if plan_matches(plan, gemms, require_bwd=require_bwd, mesh=mesh,
-                        buckets=buckets, attn=attn, scan=scan):
+                        buckets=buckets, attn=attn, scan=scan, quant=quant):
             if autotune_kw.get("epilogue"):
                 import logging
 
@@ -351,6 +374,15 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
                 )
                 plan = add_scan_subplans(plan, scan, tuple(buckets or ())
                                          or None, **autotune_kw)
+            if quant and not plan.has_quant(tuple(buckets or ())):
+                log.warning(
+                    "plan cache %s lacks quant verdicts for %s; gating and "
+                    "annotating qdtype only (keeping every schedule "
+                    "decision verbatim)", path, tuple(quant),
+                )
+                plan = add_quant_subplans(plan, tuple(quant),
+                                          quant_budget=quant_budget,
+                                          **autotune_kw)
             save_plan(path, plan)
             return plan, False
         log.warning(
@@ -358,6 +390,7 @@ def load_or_autotune(path: str | None, gemms, require_bwd: bool = False,
         )
     plan = autotune_plan(gemms, train=require_bwd, mesh=mesh,
                          decode_buckets=buckets, attn=attn, scan=scan,
+                         quant=quant, quant_budget=quant_budget,
                          **autotune_kw)
     if path:
         save_plan(path, plan)

@@ -26,6 +26,14 @@ from .flex_matmul import (
 )
 from .mesh_ops import flex_linear_sharded
 from .ops import auto_matmul, default_interpret, flex_linear, flex_matmul
+from .quantize import (
+    QDTYPES,
+    QMAX,
+    abs_max_scale,
+    channel_scale,
+    dequantize_channel,
+    quantize_channel,
+)
 from .ref import attention_ref, blocked_matmul_ref, linear_ref, matmul_ref
 
 __all__ = [
@@ -33,10 +41,15 @@ __all__ = [
     "ATTN_DECODE_KINDS",
     "ATTN_SWEEPS",
     "DEFAULT_BLOCK",
+    "QDTYPES",
+    "QMAX",
     "SCAN_DECODE_KINDS",
     "SCAN_SWEEPS",
+    "abs_max_scale",
     "attention_ref",
     "auto_matmul",
+    "channel_scale",
+    "dequantize_channel",
     "blocked_matmul_ref",
     "default_interpret",
     "flash_attention",
@@ -56,4 +69,5 @@ __all__ = [
     "matmul_ws",
     "paged_attention",
     "paged_attention_reference",
+    "quantize_channel",
 ]

@@ -109,6 +109,24 @@ accumulates in f32 (``preferred_element_type=jnp.float32``), partial sums
 stream through HBM in f32, the epilogue runs in f32, and only the final
 flush casts to ``out_dtype``.  The saved pre-activation is always f32.
 
+**Quantized operands (``qscale``).**  ``fused_matmul`` accepts a B operand
+stored int8 or fp8(e4m3) with a per-output-channel f32 scale row
+``qscale`` of shape (1, N), streamed alongside B with the bias's block
+spec (one ``(1, bn)`` row per resident B block — epilogue-operand traffic,
+like bias).  The MAC upcasts the quantized block to f32 (exact for int8
+and e4m3 lattice points) and accumulates in f32 as always; because the
+per-output-channel scale is constant across k, dequantization commutes
+with the k-accumulation and runs **once at the flush epilogue**, before
+everything else:
+
+    dequant -> bias -> activation -> residual -> cast
+
+so the existing epilogue contract — and the bit-exactness tests pinned on
+it — compose unchanged.  The streamed WS/IS schedules force the fused
+flush when ``qscale`` is present (the raw f32 staging buffer holds
+*scaled-lattice* partial sums, which must not escape undequantized); the
+saved pre-activation ``z`` is the dequantized ``a @ dequant(b) + bias``.
+
 Kernels are written for TPU (MXU-aligned blocks, VMEM scratch) and validated
 on CPU with ``interpret=True`` against ``ref.matmul_ref`` / ``ref.linear_ref``.
 """
@@ -176,21 +194,31 @@ def _block_dot(a, b, trans_a: bool, trans_b: bool):
     the block as stored and no relayout ever materialises.
     """
     dims = (((0 if trans_a else 1,), (1 if trans_b else 0,)), ((), ()))
+    if a.dtype != b.dtype:
+        # quantized path: B arrives int8/fp8 while A is a float dtype.
+        # dot_general requires matching operand dtypes, so upcast both to the
+        # f32 the MAC accumulates in anyway — exact for int8/e4m3 values.
+        a, b = a.astype(jnp.float32), b.astype(jnp.float32)
     return jax.lax.dot_general(a, b, dims, preferred_element_type=jnp.float32)
 
 
-def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
+def _os_kernel(*refs, activation: str | None, has_scale: bool = False,
+               has_bias: bool, has_res: bool,
                save_preact: bool = False, trans_a: bool = False,
                trans_b: bool = False):
     """Output-stationary: accumulate in VMEM scratch across the k grid axis.
 
     The fused epilogue runs in the ``_flush`` branch — the accumulator block
     is still in VMEM, so bias/activation/residual cost zero extra HBM trips.
+    With ``has_scale`` the flush first dequantizes the resident accumulator
+    (``acc * qscale``, per output channel — exact, since the scale is
+    constant across k) before the rest of the epilogue.
     With ``save_preact`` the flush also writes the f32 pre-activation block
     to a second output (the VJP's saved residual) — one extra HBM write.
     """
     it = iter(refs)
     a_ref, b_ref = next(it), next(it)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_res else None
     o_ref = next(it)
@@ -206,8 +234,11 @@ def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
+        acc = acc_ref[...]
+        if scale_ref is not None:
+            acc = acc * scale_ref[...].astype(jnp.float32)
         z, y = _epilogue(
-            acc_ref[...],
+            acc,
             None if bias_ref is None else bias_ref[...],
             None if res_ref is None else res_ref[...],
             activation,
@@ -217,7 +248,8 @@ def _os_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
         o_ref[...] = y.astype(o_ref.dtype)
 
 
-def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
+def _stream_accum_kernel(*refs, activation: str | None,
+                         has_scale: bool = False, has_bias: bool,
                          fused: bool, save_preact: bool = False,
                          trans_a: bool = False, trans_b: bool = False):
     """WS/IS streamed (strip=1) body: one MAC into the HBM-streamed
@@ -244,9 +276,14 @@ def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
     buffer, so after the kernel it holds the f32 pre-activation ``z`` — the
     VJP's saved residual at zero extra HBM cost (the buffer was being
     written every k step anyway).
+
+    With ``has_scale`` the staging buffer accumulates scaled-lattice
+    partial sums and the flush dequantizes before the epilogue — the driver
+    forces ``fused`` on so the raw buffer never escapes undequantized.
     """
     it = iter(refs)
     a_ref, b_ref = next(it), next(it)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     part_ref = next(it)
     out_ref = next(it) if fused else None
@@ -264,8 +301,11 @@ def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
 
         @pl.when(k == pl.num_programs(0) - 1)
         def _flush():
+            acc = part_ref[...]
+            if scale_ref is not None:
+                acc = acc * scale_ref[...].astype(jnp.float32)
             z, y = _epilogue(
-                part_ref[...],
+                acc,
                 None if bias_ref is None else bias_ref[...],
                 None,
                 activation,
@@ -275,7 +315,8 @@ def _stream_accum_kernel(*refs, activation: str | None, has_bias: bool,
             out_ref[...] = y.astype(out_ref.dtype)
 
 
-def _strip_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
+def _strip_kernel(*refs, activation: str | None, has_scale: bool = False,
+                  has_bias: bool, has_res: bool,
                   fused: bool, save_preact: bool, trans_a: bool, trans_b: bool,
                   ns: int, row_strip: bool):
     """WS/IS two-level body: one MAC into the VMEM-resident accumulator strip.
@@ -298,6 +339,7 @@ def _strip_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
     """
     it = iter(refs)
     a_ref, b_ref = next(it), next(it)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_res else None
     o_ref = next(it)
@@ -331,8 +373,12 @@ def _strip_kernel(*refs, activation: str | None, has_bias: bool, has_res: bool,
                 bias = None
             else:  # WS bias block is (1, bn); IS carries (1, ns*bn), sliced
                 bias = bias_ref[...] if row_strip else bias_ref[sl]
+            blk = acc[sl]
+            if scale_ref is not None:  # same layout as bias: dequant first
+                scale = scale_ref[...] if row_strip else scale_ref[sl]
+                blk = blk * scale.astype(jnp.float32)
             z, y = _epilogue(
-                acc[sl], bias,
+                blk, bias,
                 None if res_ref is None else res_ref[sl], activation,
             )
             if save_preact:
@@ -381,9 +427,13 @@ def _operand_specs(bm, bk, bn, a_map, b_map, trans_a: bool, trans_b: bool):
     return a_spec, b_spec
 
 
-def _epilogue_inputs(bias, res, bias_map, out_map, bm, bn):
-    """Extra (arrays, specs) for whichever epilogue operands are present."""
+def _epilogue_inputs(qscale, bias, res, bias_map, out_map, bm, bn):
+    """Extra (arrays, specs) for whichever epilogue operands are present.
+    The quant scale row shares the bias's (1, bn) layout and index map."""
     arrays, specs = [], []
+    if qscale is not None:
+        arrays.append(qscale)
+        specs.append(pl.BlockSpec((1, bn), bias_map))
     if bias is not None:
         arrays.append(bias)
         specs.append(pl.BlockSpec((1, bn), bias_map))
@@ -463,6 +513,9 @@ def schedule_cost_bytes(
     strip: int = 1,
     in_bytes: int = 4,
     out_bytes: int = 4,
+    *,
+    a_bytes: int | None = None,
+    b_bytes: int | None = None,
 ) -> int:
     """HBM bytes the kernel's schedule actually moves, counted by walking
     the same grid and index maps the pallas_call builders emit.
@@ -478,7 +531,12 @@ def schedule_cost_bytes(
     leaves an index map constant, Pallas coalesces the refetch, and the
     closed form deliberately stays conservative rather than growing
     special cases — it never undercounts, so pruning stays safe).
-    Epilogue operands (bias/residual) are outside both models.
+    Epilogue operands (bias/residual/qscale) are outside both models.
+
+    ``a_bytes`` / ``b_bytes`` give each operand its own element width
+    (default ``in_bytes`` for both) — the quantized schedules stream a
+    1-byte B against a 2/4-byte A, and the walk must count what the kernel
+    actually moves.
     """
     import itertools
 
@@ -505,7 +563,8 @@ def schedule_cost_bytes(
         else:
             grid, a_map, b_map, out_map, _ = _stream_schedule(stationary, mb, kb, nb)
             out_blk = bm * bn
-    a_blk, b_blk = bm * bk * in_bytes, bk * bn * in_bytes
+    a_blk = bm * bk * (in_bytes if a_bytes is None else a_bytes)
+    b_blk = bk * bn * (in_bytes if b_bytes is None else b_bytes)
     total = 0
     prev_a = prev_b = prev_o = None
     seen_out: set[tuple[int, int]] = set()
@@ -540,6 +599,7 @@ def matmul_os(
     trans_a: bool = False,
     trans_b: bool = False,
     strip: int = 1,
+    qscale: jax.Array | None = None,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     if strip != 1:
         raise ValueError(
@@ -550,10 +610,11 @@ def matmul_os(
     bm, bk, bn = block
     _check(M, K, N, bm, bk, bn)
     grid, a_map, b_map, out_map, bias_map = _os_schedule(M // bm, K // bk, N // bn)
-    extra, extra_specs = _epilogue_inputs(bias, residual, bias_map, out_map, bm, bn)
+    extra, extra_specs = _epilogue_inputs(
+        qscale, bias, residual, bias_map, out_map, bm, bn)
     a_spec, b_spec = _operand_specs(bm, bk, bn, a_map, b_map, trans_a, trans_b)
     kern = functools.partial(
-        _os_kernel, activation=activation,
+        _os_kernel, activation=activation, has_scale=qscale is not None,
         has_bias=bias is not None, has_res=residual is not None,
         save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
     )
@@ -592,6 +653,7 @@ def _matmul_stream(
     trans_a: bool = False,
     trans_b: bool = False,
     strip: int = 1,
+    qscale: jax.Array | None = None,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Shared WS/IS driver.
 
@@ -602,6 +664,8 @@ def _matmul_stream(
     fused in the last-k branch — and the residual added *outside* the
     kernel on the f32 result (same op order, bit-identical; an in-kernel
     fetch under this grid would re-stream the residual every k plane).
+    A ``qscale`` forces the fused flush: the staging buffer accumulates
+    scaled-lattice partials that must dequantize before leaving the kernel.
     """
     M, K, N = _logical_dims(a, b, trans_a, trans_b)
     bm, bk, bn = block
@@ -611,7 +675,7 @@ def _matmul_stream(
             a, b, stationary=stationary, bias=bias, residual=residual,
             activation=activation, out_dtype=out_dtype, block=block,
             interpret=interpret, save_preact=save_preact,
-            trans_a=trans_a, trans_b=trans_b, strip=strip,
+            trans_a=trans_a, trans_b=trans_b, strip=strip, qscale=qscale,
         )
     grid, a_map, b_map, c_map, bias_map = _stream_schedule(
         stationary, M // bm, K // bk, N // bn
@@ -621,13 +685,15 @@ def _matmul_stream(
     # f32 block still needs the (f32) residual added before the final cast
     fused = (
         save_preact or bias is not None or activation is not None
+        or qscale is not None
         or (residual is None and out_dtype is not None
             and jnp.dtype(out_dtype) != jnp.float32)
     )
-    extra, extra_specs = _epilogue_inputs(bias, None, bias_map, c_map, bm, bn)
+    extra, extra_specs = _epilogue_inputs(
+        qscale, bias, None, bias_map, c_map, bm, bn)
     kern = functools.partial(
         _stream_accum_kernel, activation=activation,
-        has_bias=bias is not None, fused=fused,
+        has_scale=qscale is not None, has_bias=bias is not None, fused=fused,
         save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
     )
     out_specs = pl.BlockSpec((bm, bn), c_map)
@@ -672,6 +738,7 @@ def _matmul_strip(
     trans_a: bool,
     trans_b: bool,
     strip: int,
+    qscale: jax.Array | None = None,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Two-level WS/IS driver: VMEM-resident accumulator strip over the
     streamed output axis, one HBM write per output block."""
@@ -695,9 +762,13 @@ def _matmul_strip(
     fused = (
         save_preact
         or bias is not None or residual is not None or activation is not None
+        or qscale is not None
         or (out_dtype is not None and jnp.dtype(out_dtype) != jnp.float32)
     )
     extra, extra_specs = [], []
+    if qscale is not None:  # rides the bias layout: (1, bn) / (1, ns*bn)
+        extra.append(qscale)
+        extra_specs.append(pl.BlockSpec(bias_block, bias_map))
     if bias is not None:
         extra.append(bias)
         extra_specs.append(pl.BlockSpec(bias_block, bias_map))
@@ -705,7 +776,7 @@ def _matmul_strip(
         extra.append(residual)
         extra_specs.append(pl.BlockSpec(sblock, out_map))
     kern = functools.partial(
-        _strip_kernel, activation=activation,
+        _strip_kernel, activation=activation, has_scale=qscale is not None,
         has_bias=bias is not None, has_res=residual is not None, fused=fused,
         save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
         ns=strip, row_strip=row_strip,
@@ -795,6 +866,7 @@ def fused_matmul(
     trans_a: bool = False,
     trans_b: bool = False,
     strip: int = 1,
+    qscale: jax.Array | None = None,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Matmul with the epilogue fused into the kernel's final flush.
 
@@ -807,6 +879,10 @@ def fused_matmul(
     (residual included) fuses at the strip flush; with ``strip = 1`` the
     streamed WS/IS kernels fuse bias/activation/cast and the residual is
     added outside the kernel in the same f32 op order (bit-identical).
+    ``qscale`` (1, N) f32 marks B as a quantized (int8/fp8) operand with
+    per-output-channel scales: the flush dequantizes the f32 accumulator
+    before the rest of the epilogue (dequant -> bias -> act -> residual ->
+    cast), so quantized and unquantized calls share the epilogue contract.
     """
     if activation is not None and activation not in ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
@@ -814,5 +890,5 @@ def fused_matmul(
         a, b, bias=bias, residual=residual, activation=activation,
         out_dtype=out_dtype, block=block, interpret=interpret,
         save_preact=save_preact, trans_a=trans_a, trans_b=trans_b,
-        strip=strip,
+        strip=strip, qscale=qscale,
     )

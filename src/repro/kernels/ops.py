@@ -60,6 +60,7 @@ import jax.numpy as jnp
 from repro.core.dataflow import Dataflow, GemmShape, best_kernel_dataflow
 
 from . import flex_matmul as fk
+from .quantize import QDTYPES, quantize_channel
 
 # Override for one backward GEMM, e.g. from a CMU plan:
 #   (Dataflow.WS, (256, 256, 256))                 — block None = DEFAULT_BLOCK
@@ -150,18 +151,34 @@ def _bwd_choice(spec: BwdSpec | None, M: int, K: int, N: int,
 
 
 def _matmul_run(a, b, dataflow, block, interpret, out_dtype,
-                trans_a: bool = False, trans_b: bool = False, strip: int = 1):
+                trans_a: bool = False, trans_b: bool = False, strip: int = 1,
+                qdtype: str | None = None):
     """Primal blocked matmul: pad -> flex kernel -> unpad -> cast.
 
     With ``trans_a`` / ``trans_b`` the operands are in transposed physical
     layout ((K, M) / (N, K)); padding follows the physical axes and the
     kernel reads them through the transposed index maps — no copy.
     ``strip`` selects the WS/IS two-level schedule, clamped to what the
-    padded geometry admits (``_fit_strip``).
+    padded geometry admits (``_fit_strip``).  ``qdtype`` quantizes the B
+    operand per output channel (int8/fp8) and dispatches the fused-dequant
+    kernel — untransposed operands only (the backward GEMMs run on the
+    saved full-precision operands, so the quant path never needs trans).
     """
     M, K, N = fk._logical_dims(a, b, trans_a, trans_b)
     bm, bk, bn = _fit_block(M, K, N, block)
     strip = _fit_strip(dataflow, strip, M, N, (bm, bk, bn))
+    if qdtype in QDTYPES:
+        if trans_a or trans_b:
+            raise ValueError(
+                "quantized flex_matmul supports untransposed operands only")
+        out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+        qb, scale = quantize_channel(b, qdtype, axis=0)
+        out = fk.fused_matmul(
+            _pad_to(a, bm, bk), _pad_to(qb, bk, bn), dataflow,
+            qscale=_pad_to(scale, 1, bn), block=(bm, bk, bn),
+            interpret=interpret, strip=strip,
+        )
+        return out[:M, :N].astype(out_dtype)
     ap = _pad_to(a, bk, bm) if trans_a else _pad_to(a, bm, bk)
     bp = _pad_to(b, bn, bk) if trans_b else _pad_to(b, bk, bn)
     out = fk.matmul(ap, bp, dataflow, block=(bm, bk, bn), interpret=interpret,
@@ -180,7 +197,9 @@ def _matmul_fwd(cfg, a, b):
 
 
 def _matmul_bwd(cfg, residuals, g):
-    dataflow, block, interpret, out_dtype, trans_a, trans_b, strip = cfg
+    # qdtype is forward-only: the cotangent GEMMs run on the saved
+    # full-precision operands (straight-through estimator).
+    dataflow, block, interpret, out_dtype, trans_a, trans_b, strip, _ = cfg
     a, b = residuals
     M, K, N = fk._logical_dims(a, b, trans_a, trans_b)
     # With A' = op(A), B' = op(B):  dA' = g @ B'^T  and  dB' = A'^T @ g.
@@ -215,7 +234,7 @@ _matmul_core.defvjp(_matmul_fwd, _matmul_bwd)
 
 @functools.partial(
     jax.jit, static_argnames=("dataflow", "block", "interpret", "out_dtype",
-                              "trans_a", "trans_b", "strip")
+                              "trans_a", "trans_b", "strip", "qdtype")
 )
 def flex_matmul(
     a: jax.Array,
@@ -227,6 +246,7 @@ def flex_matmul(
     trans_a: bool = False,
     trans_b: bool = False,
     strip: int = 1,
+    qdtype: str | None = None,
 ) -> jax.Array:
     """C = op(A) @ op(B) under the given dataflow; pads/unpads to block
     multiples.  ``trans_a`` / ``trans_b`` read the operands in transposed
@@ -234,6 +254,8 @@ def flex_matmul(
     ``strip >= 2`` runs the WS/IS two-level schedule (VMEM-resident
     accumulator strip, no partial-sum HBM traffic), clamped to the padded
     geometry; OS and ``strip = 1`` run today's streamed schedules.
+    ``qdtype`` ("int8"/"fp8") quantizes B per output channel and runs the
+    fused-dequant kernel — forward only; gradients flow straight-through.
 
     Differentiable: ``jax.grad`` routes both cotangent GEMMs back through
     the flex kernels, themselves transpose-free for every flag combination
@@ -241,7 +263,8 @@ def flex_matmul(
     """
     fk._logical_dims(a, b, trans_a, trans_b)  # validates the inner dims
     return _matmul_core(
-        (dataflow, block, interpret, out_dtype, trans_a, trans_b, strip), a, b
+        (dataflow, block, interpret, out_dtype, trans_a, trans_b, strip,
+         qdtype), a, b
     )
 
 
@@ -261,6 +284,7 @@ class _LinearCfg(NamedTuple):
     bwd_dx: BwdSpec | None
     bwd_dw: BwdSpec | None
     strip: int = 1
+    qdtype: str | None = None
 
 
 def _linear_run(cfg: _LinearCfg, x, w, b, residual, save_preact: bool):
@@ -269,16 +293,22 @@ def _linear_run(cfg: _LinearCfg, x, w, b, residual, save_preact: bool):
     _, N = w.shape
     bm, bk, bn = _fit_block(M, K, N, cfg.block)
     strip = _fit_strip(cfg.dataflow, cfg.strip, M, N, (bm, bk, bn))
+    odt = cfg.out_dtype or jnp.promote_types(x.dtype, w.dtype)
+    qscale = None
+    if cfg.qdtype in QDTYPES:
+        # weight-only quant: per-output-channel scale rides the bias plumbing
+        # into the kernel, dequant fuses at the flush before the epilogue
+        w, qscale = quantize_channel(w, cfg.qdtype, axis=0)
+        qscale = _pad_to(qscale, 1, bn)
     xp = _pad_to(x, bm, bk)
     wp = _pad_to(w, bk, bn)
     bp = None if b is None else _pad_to(b.reshape(1, N), 1, bn)
     rp = None if residual is None else _pad_to(residual, bm, bn)
-    odt = cfg.out_dtype or jnp.promote_types(x.dtype, w.dtype)
     out = fk.fused_matmul(
         xp, wp, cfg.dataflow,
         bias=bp, residual=rp, activation=cfg.activation, out_dtype=odt,
         block=(bm, bk, bn), interpret=cfg.interpret, save_preact=save_preact,
-        strip=strip,
+        strip=strip, qscale=qscale,
     )
     if save_preact:
         out, z = out
@@ -342,7 +372,7 @@ _linear_core.defvjp(_linear_fwd, _linear_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=("activation", "dataflow", "block", "interpret",
-                     "out_dtype", "bwd_dx", "bwd_dw", "strip"),
+                     "out_dtype", "bwd_dx", "bwd_dw", "strip", "qdtype"),
 )
 def flex_linear(
     x: jax.Array,
@@ -358,6 +388,7 @@ def flex_linear(
     bwd_dx: BwdSpec | None = None,
     bwd_dw: BwdSpec | None = None,
     strip: int = 1,
+    qdtype: str | None = None,
 ) -> jax.Array:
     """Fused linear layer: ``act(x @ w + b) + residual`` in one kernel pass.
 
@@ -382,6 +413,13 @@ def flex_linear(
     forward kernel saved (see module docstring for the save-vs-recompute
     policy).
 
+    ``qdtype`` ("int8"/"fp8") runs the forward GEMM with the weight
+    quantized per output channel, dequant fused into the flush before
+    bias/activation/residual/cast.  Forward-only: the VJP saves the
+    full-precision weight and both cotangent GEMMs run unquantized
+    (straight-through estimator), so training against a quantized serve
+    plan needs no extra plumbing.
+
     Examples (interpret mode, so they run anywhere):
 
     >>> import jax, jax.numpy as jnp
@@ -398,7 +436,7 @@ def flex_linear(
     if K != K2:
         raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
     cfg = _LinearCfg(activation, dataflow, block, interpret, out_dtype,
-                     bwd_dx, bwd_dw, strip)
+                     bwd_dx, bwd_dw, strip, qdtype)
     return _linear_core(cfg, x, w, b, residual)
 
 

@@ -1,0 +1,63 @@
+"""Per-channel quantization helpers shared by kernels, CMU, and runtime.
+
+One source of truth for the abs-max scale computation: the flex kernels'
+weight-only int8/fp8 path (``ops.flex_linear`` with ``qdtype=``), the CMU's
+accuracy-gate calibration (``cmu.measure_quant_error``), and the gradient
+compressor (``runtime.compression``) all derive their scales here, so a
+plan recorded against one quantizer dispatches against the same one.
+
+Convention: symmetric per-channel scales, ``scale = abs_max / QMAX + eps``
+with ``QMAX = 127`` for int8 and ``448`` (the e4m3 max finite) for fp8.
+Quantized values dequantize as ``q * scale``; with f32 accumulation in the
+kernels this is exact for the stored lattice points, so dequant commutes
+with k-accumulation and can run once at the flush epilogue.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Quantized operand dtypes the flex kernels support.
+QDTYPES = ("int8", "fp8")
+
+#: Largest representable magnitude per qdtype (e4m3's max finite is 448).
+QMAX = {"int8": 127.0, "fp8": 448.0}
+
+_FP8 = jnp.float8_e4m3fn
+
+
+def abs_max_scale(x, qdtype: str, axis, keepdims: bool = True):
+    """Symmetric abs-max scale of ``x`` along ``axis``: the one per-channel
+    scale formula every quantizer in the repo uses.  f32 math, with the
+    classic ``+ 1e-12`` guard so all-zero channels divide cleanly."""
+    if qdtype not in QMAX:
+        raise ValueError(f"unknown quantized dtype {qdtype!r}")
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=keepdims)
+    return amax / QMAX[qdtype] + 1e-12
+
+
+def channel_scale(w, qdtype: str, axis: int = 0):
+    """Per-output-channel scale for a ``(K, N)`` weight: reduce over ``axis``
+    (the contraction axis), keeping dims — shape ``(1, N)`` f32."""
+    return abs_max_scale(w, qdtype, axis=axis, keepdims=True)
+
+
+def quantize_channel(w, qdtype: str, axis: int = 0):
+    """Quantize ``w`` per channel → ``(q, scale)``.
+
+    int8: round-to-nearest, clipped to ±127.  fp8: clip to ±448 then cast
+    (the cast itself rounds to the nearest e4m3 lattice point).  Either way
+    ``q.astype(f32) * scale`` is the dequantized weight.
+    """
+    scale = channel_scale(w, qdtype, axis=axis)
+    b = w.astype(jnp.float32) / scale
+    if qdtype == "int8":
+        q = jnp.clip(jnp.round(b), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(b, -448.0, 448.0).astype(_FP8)
+    return q, scale
+
+
+def dequantize_channel(q, scale):
+    """Inverse of ``quantize_channel`` (up to rounding): f32 dequant."""
+    return q.astype(jnp.float32) * scale

@@ -113,6 +113,18 @@ def main() -> None:
                          "save (bucketed decode sub-plans included)")
     ap.add_argument("--pallas", action="store_true",
                     help="dispatch projections to the fused flex kernels")
+    ap.add_argument("--quant", nargs="?", const="int8,fp8", default="",
+                    help="tune weight-quantized decode/prefill GEMMs: a "
+                         "comma list of dtypes from {int8, fp8} (bare flag "
+                         "= 'int8,fp8').  Each layer is accuracy-gated and "
+                         "either dispatches the quantized kernel with its "
+                         "fused dequant epilogue or records a bf16 "
+                         "fallback in the plan; requires --pallas to "
+                         "change dispatch")
+    ap.add_argument("--quant-budget", type=float, default=None,
+                    help="accuracy gate bound: max relative RMS calibration "
+                         "error a quantized layer may add (default "
+                         "cmu.QUANT_ERROR_BUDGET)")
     ap.add_argument("--attn-pallas", action="store_true",
                     help="dispatch attention to the planned flex flash/"
                          "paged kernel family (prefill flash + per-bucket "
@@ -149,8 +161,10 @@ def main() -> None:
 
 def _serve(args, cfg, mesh) -> None:
     buckets = None if args.fixed_batch else serve_buckets(args.slots)
+    quant = tuple(q for q in args.quant.split(",") if q) or None
     setup_plan_cache(args.plan_cache, cfg, args.requests * args.prompt_len,
-                     mesh=mesh, decode_buckets=buckets)
+                     mesh=mesh, decode_buckets=buckets, quant=quant,
+                     quant_budget=args.quant_budget)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if mesh is not None:

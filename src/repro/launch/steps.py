@@ -149,7 +149,9 @@ def make_decode_step(model: Model, *, paged: bool = False) -> Callable:
 
 def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True,
                      train: bool = False, mesh=None,
-                     decode_buckets: tuple[int, ...] | None = None):
+                     decode_buckets: tuple[int, ...] | None = None,
+                     quant: tuple[str, ...] | None = None,
+                     quant_budget: float | None = None):
     """Program the CMU for a serve/train run.
 
     Loads the persisted ``DataflowPlan`` from ``path`` when it exists;
@@ -192,6 +194,13 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     sweep + chunk length for prefill, plus per-bucket decode sub-plans
     (fused Pallas step kernel vs jnp recurrence).  v1–v7 caches load with
     the scan row absent and are upgraded the same incremental way.
+
+    With ``quant`` (``serve --quant``'s dtype tuple) the forward rows and
+    decode sub-plans additionally carry **quant verdicts**: each layer is
+    accuracy-gated (``measure_quant_error`` under ``quant_budget``) and
+    either dispatches a weight-quantized kernel ("int8"/"fp8") or records
+    the "bf16" fallback.  v1–v8 caches load with the verdicts absent and
+    gain only the annotations — every schedule decision stays verbatim.
     """
     if not path:
         return None
@@ -226,7 +235,9 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
     plan, loaded = load_or_autotune(path, gemms, require_bwd=train,
                                     mesh=mesh_spec, measure=measure,
                                     buckets=decode_buckets, attn=attn,
-                                    scan=scan, epilogue=model_epilogues(cfg))
+                                    scan=scan, quant=quant,
+                                    quant_budget=quant_budget,
+                                    epilogue=model_epilogues(cfg))
     activate_plan(plan)
     src = "loaded" if loaded else "autotuned"
     stripped = sum(
@@ -265,6 +276,16 @@ def setup_plan_cache(path: str | None, cfg, tokens: int, *, measure: bool = True
             sp.sweep, sp.chunk, sp.source,
             f", decode kinds {({b: s.sweep for b, s in sorted(sp.decode.items())})}"
             if sp.decode else "",
+        )
+    if quant:
+        qh: dict[str, int] = {}
+        for lp in plan.layers:
+            qh[lp.qdtype or "none"] = qh.get(lp.qdtype or "none", 0) + 1
+            for gp in (lp.decode or {}).values():
+                qh[gp.qdtype or "none"] = qh.get(gp.qdtype or "none", 0) + 1
+        logging.getLogger(__name__).info(
+            "quant verdicts for %s: %s (bf16 = gated/rejected fallback)",
+            tuple(quant), qh,
         )
     return plan
 

@@ -45,6 +45,12 @@ def linear(
     argmin.  Otherwise plain XLA ops (einsum + separate epilogue), the
     dry-run path.
 
+    When the plan row (or the decode-bucket sub-plan that overrides it)
+    carries a quantized ``qdtype`` verdict ("int8"/"fp8"), the dispatch
+    quantizes the weight per output channel and the kernel fuses the
+    dequant into its flush epilogue; "bf16" and None run full precision,
+    and the mesh-native sharded path never quantizes.
+
     When a rules context is active (``sharding.use_rules``) and the GEMM
     divides the mesh, the Pallas path goes **mesh-native**: the layer runs
     as a shard_map-composed collective schedule around the local flex
@@ -95,8 +101,10 @@ def linear(
 
         bwd_dx = bwd_dw = None
         strip = 1
+        qdtype = None
         if lp is not None:
             df, blk, strip = lp.dataflow, lp.block or DEFAULT_BLOCK, lp.strip
+            qdtype = lp.qdtype
             # decode-bucket dispatch: a skinny (decode-geometry) call whose
             # row count fits a tuned batch-size bucket runs that bucket's
             # plan — the serving scheduler quantizes its live batch to the
@@ -104,6 +112,7 @@ def linear(
             sub = lp.decode_plan(x2.shape[0]) if lp.decode else None
             if sub is not None:
                 df, blk, strip = sub.dataflow, sub.block or DEFAULT_BLOCK, sub.strip
+                qdtype = sub.qdtype
             if lp.bwd_dx is not None:
                 bwd_dx = (lp.bwd_dx.dataflow, lp.bwd_dx.block, lp.bwd_dx.trans,
                           lp.bwd_dx.strip)
@@ -113,11 +122,15 @@ def linear(
         else:
             df, _ = best_kernel_dataflow(GemmShape(x2.shape[0], K, N, name=name))
             blk = DEFAULT_BLOCK
+        # only a quantized verdict dispatches quantized — None (v1–v8 plan)
+        # and "bf16" (quant searched and rejected) both run full precision
+        if qdtype not in ("int8", "fp8"):
+            qdtype = None
         out = flex_linear(
             x2, w, None if b is None else b.astype(x.dtype),
             activation=activation, residual=r2, dataflow=df, block=blk,
             interpret=default_interpret(), out_dtype=x.dtype,
-            bwd_dx=bwd_dx, bwd_dw=bwd_dw, strip=strip,
+            bwd_dx=bwd_dx, bwd_dw=bwd_dw, strip=strip, qdtype=qdtype,
         )
         return out.reshape(*lead, N)
     y = jnp.einsum("...d,df->...f", x, w)

@@ -5,6 +5,10 @@ feedback cut that traffic 4x.  ``compressed_psum`` is the shard_map-side op:
 quantise locally -> all-reduce int32 (sums of int8 fit easily) -> dequantise,
 with the quantisation residual carried to the next step (error feedback keeps
 SGD/Adam convergence — tests/test_runtime.py checks the residual telescopes).
+
+The per-block scale math is ``kernels.quantize.abs_max_scale`` — the same
+abs-max formula the weight-quantized flex kernels and the CMU accuracy gate
+use, so there is one quantizer convention in the repo.
 """
 
 from __future__ import annotations
@@ -13,6 +17,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.quantize import abs_max_scale
 
 Params = Any
 BLOCK = 256
@@ -27,7 +33,7 @@ def _blockify(g: jax.Array) -> tuple[jax.Array, tuple]:
 
 def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array, tuple]:
     b, meta = _blockify(g)
-    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0 + 1e-12
+    scale = abs_max_scale(b, "int8", axis=1)
     q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
     return q, scale, meta
 
@@ -62,7 +68,7 @@ def compressed_psum(g: jax.Array, axis_name: str, residual: jax.Array | None = N
         g32 = g32 + residual
     b, meta = _blockify(g32)
     n = jax.lax.psum(1, axis_name)
-    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0 + 1e-12
+    scale = abs_max_scale(b, "int8", axis=1)
     scale = jax.lax.pmax(scale, axis_name)  # shared scale (tiny collective)
     q = jnp.clip(jnp.round(b / scale), -127, 127).astype(jnp.int8)
     qs = jax.lax.psum(q.astype(jnp.int32), axis_name)

@@ -23,6 +23,7 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.core import load_or_autotune, model_gemms, save_plan
+from repro.core.plan_cache import PLAN_CACHE_VERSION
 from repro.launch.scheduler import (
     Request,
     RequestStatus,
@@ -348,7 +349,7 @@ def test_corrupt_plan_cache_is_quarantined_and_retuned(tmp_path):
     assert not loaded, "a corrupt cache must re-tune, not crash"
     assert os.path.exists(path + ".corrupt"), "evidence preserved"
     with open(path) as f:
-        assert json.load(f)["version"] == 8  # fresh plan persisted
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION  # fresh plan
     again, loaded = load_or_autotune(path, GEMMS(cfg), measure=False)
     assert loaded, "the re-tuned cache reloads cleanly next launch"
 
@@ -373,4 +374,4 @@ def test_future_schema_plan_cache_is_quarantined(tmp_path):
     with open(path + ".corrupt") as f:
         assert json.load(f)["version"] == 99  # original preserved verbatim
     with open(path) as f:
-        assert json.load(f)["version"] == 8
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION

@@ -41,6 +41,7 @@ from repro.core import (
     plan_matches,
     save_plan,
 )
+from repro.core.plan_cache import PLAN_CACHE_VERSION
 from repro.core import cmu as cmu_mod
 from repro.kernels import (
     ATTN_SWEEPS,
@@ -337,7 +338,7 @@ def test_v6_cache_loads_with_attention_none_and_upgrades(tmp_path):
                 lp.mesh, lp.decode) == before[lp.name], \
             f"incremental attention upgrade retuned {lp.name}"
     with open(path) as f:
-        assert json.load(f)["version"] == 8
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION
     again, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
                                      attn=attn, measure=False)
     assert loaded  # second launch reloads, no tuning

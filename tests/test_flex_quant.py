@@ -1,0 +1,356 @@
+"""Weight-quantized flex kernels + the CMU precision axis.
+
+Pins five contracts:
+
+  * **Value contract** — every (dataflow, strip, qdtype) point matches the
+    XLA dequant reference (``x @ dequantize(quantize(w))``) to f32
+    tolerance, and all schedule points agree *bitwise* with each other:
+    the quantized lattice is fixed by the shared ``kernels.quantize``
+    scale math, and a schedule decides residency, never bits.
+  * **Epilogue contract** — dequant fuses at the flush *before* the
+    epilogue, so ``act((x @ q) * scale + b) + res`` composes exactly like
+    the full-precision epilogue path.
+  * **Gate contract** — a quantized candidate can win only when the
+    accuracy gate passes: with a fake calibration-error hook over budget
+    the verdict is the recorded ``"bf16"`` fallback even when a fake timer
+    says the quantized kernel is faster.
+  * **Schema contract** — v8 plan caches (no qdtype/qerror keys) load
+    bit-for-bit with ``qdtype=None``; a quant-requesting load upgrades
+    incrementally — ``add_quant_subplans`` keeps every schedule decision
+    verbatim and only annotates verdicts — and the file re-persists as v9.
+  * **One-quantizer contract** — ``runtime.compression`` computes the same
+    abs-max scale as the kernels (bitwise), and the int8/fp8 round-trip
+    error bounds that budget the accuracy gate hold.
+"""
+
+import dataclasses
+import importlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core import (
+    ALL_DATAFLOWS,
+    Dataflow,
+    GemmShape,
+    add_quant_subplans,
+    autotune_plan,
+    hbm_traffic_bytes,
+    load_or_autotune,
+    load_plan,
+    plan_matches,
+    save_plan,
+)
+from repro.core import cmu as cmu_mod
+from repro.core.plan_cache import PLAN_CACHE_VERSION
+from repro.kernels import (
+    QDTYPES,
+    abs_max_scale,
+    dequantize_channel,
+    flex_linear,
+    flex_matmul,
+    quantize_channel,
+)
+from repro.runtime import compression as comp
+
+fk = importlib.import_module("repro.kernels.flex_matmul")
+
+RNG = np.random.default_rng(17)
+
+
+def _operands(M, K, N, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(K, N)) * 0.1, jnp.float32)
+    return a, b
+
+
+def _bits(x) -> bytes:
+    return np.asarray(x).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# property sweep: dataflow x schedule x qdtype vs the XLA dequant reference
+# ---------------------------------------------------------------------------
+
+
+@given(
+    qd=st.sampled_from(list(QDTYPES)),
+    shape=st.sampled_from([(48, 64, 32), (64, 96, 64), (16, 64, 96)]),
+)
+@settings(max_examples=6, deadline=None)
+def test_quant_schedule_family_property_sweep(qd, shape):
+    """Every (dataflow, strip) schedule of the quantized GEMM matches the
+    XLA dequant reference, and all schedule points are mutually bitwise:
+    the quantized lattice is a property of the operands, not the schedule."""
+    M, K, N = shape
+    a, b = _operands(M, K, N, seed=sum(shape))
+    ref = np.asarray(a @ dequantize_channel(*quantize_channel(b, qd, axis=0)))
+    blk = (16, 32, 16)
+    outs = {}
+    for df in ALL_DATAFLOWS:
+        strips = [1] if df is Dataflow.OS else [1, 2]
+        for strip in strips:
+            outs[(df, strip)] = flex_matmul(
+                a, b, dataflow=df, block=blk, interpret=True, strip=strip,
+                qdtype=qd)
+    for key, out in outs.items():
+        np.testing.assert_allclose(np.asarray(out), ref, atol=2e-4, rtol=2e-4,
+                                   err_msg=f"schedule={key} qdtype={qd}")
+    bits = {_bits(o) for o in outs.values()}
+    assert len(bits) == 1, \
+        f"quantized schedules diverged bitwise for {qd}: {list(outs)}"
+
+
+@pytest.mark.parametrize("qd", QDTYPES)
+def test_quant_epilogue_composition(qd):
+    """Dequant fuses *before* the epilogue: the fused quantized linear is
+    act((x @ q) * scale + bias) + residual — same composition contract as
+    the full-precision epilogue, on the dequantized weight."""
+    M, K, N = 32, 64, 48
+    x, w = _operands(M, K, N, seed=3)
+    bias = jnp.asarray(RNG.normal(size=(N,)), jnp.float32)
+    res = jnp.asarray(RNG.normal(size=(M, N)), jnp.float32)
+    out = flex_linear(x, w, bias, activation="gelu", residual=res,
+                      dataflow=Dataflow.WS, block=(16, 32, 16),
+                      interpret=True, qdtype=qd)
+    wq = dequantize_channel(*quantize_channel(w, qd, axis=0))
+    ref = jax.nn.gelu(x @ wq + bias[None, :], approximate=True) + res
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_quant_rejects_transposed_operands():
+    a, b = _operands(32, 32, 32)
+    with pytest.raises(ValueError, match="untransposed"):
+        flex_matmul(a.T, b, trans_a=True, interpret=True, qdtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# accuracy gate: quant wins only when the calibration error fits the budget
+# ---------------------------------------------------------------------------
+
+GEMMS = lambda: [GemmShape(64, 64, 96, name="mlp.w1"),  # noqa: E731
+                 GemmShape(64, 96, 64, name="mlp.w2")]
+
+
+def test_gate_rejects_over_budget_error(monkeypatch):
+    """A fake calibration hook over budget forces the recorded "bf16"
+    fallback; under budget the analytic ranking quantizes (1-byte weight
+    stream beats bf16 on every bandwidth-bound shape)."""
+    monkeypatch.setattr(cmu_mod, "measure_quant_error",
+                        lambda gemm, qd: 10.0)
+    plan = autotune_plan(GEMMS(), measure=False, quant=("int8",))
+    assert all(lp.qdtype == "bf16" and lp.qerror is None
+               for lp in plan.layers)
+
+    monkeypatch.setattr(cmu_mod, "measure_quant_error",
+                        lambda gemm, qd: 1e-4)
+    plan = autotune_plan(GEMMS(), measure=False, quant=("int8",))
+    assert all(lp.qdtype == "int8" and lp.qerror == 1e-4
+               for lp in plan.layers)
+
+
+def test_gate_budget_is_configurable(monkeypatch):
+    monkeypatch.setattr(cmu_mod, "measure_quant_error",
+                        lambda gemm, qd: 0.03)
+    tight = autotune_plan(GEMMS(), measure=False, quant=("int8",),
+                          quant_budget=0.01)
+    loose = autotune_plan(GEMMS(), measure=False, quant=("int8",),
+                          quant_budget=0.05)
+    assert all(lp.qdtype == "bf16" for lp in tight.layers)
+    assert all(lp.qdtype == "int8" for lp in loose.layers)
+
+
+def test_quant_candidate_wins_only_when_gate_passes(monkeypatch):
+    """Fake-timer planning: the timer says the quantized kernel is 100x
+    faster, but the verdict follows the gate — quantized when calibration
+    fits the budget, the "bf16" fallback when it does not."""
+
+    def fake_timer(gemm, df, blk, qdtype=None, **kw):
+        base = hbm_traffic_bytes(gemm, df, *blk).time_s()
+        return base * 0.01 if qdtype else base
+
+    monkeypatch.setattr(cmu_mod, "measure_kernel", fake_timer)
+
+    monkeypatch.setattr(cmu_mod, "measure_quant_error",
+                        lambda gemm, qd: 1e-4)
+    plan = autotune_plan(GEMMS(), measure=True, iters=1, quant=("int8",))
+    assert all(lp.qdtype == "int8" for lp in plan.layers)
+    assert all(lp.source == "measured" for lp in plan.layers)
+
+    monkeypatch.setattr(cmu_mod, "measure_quant_error",
+                        lambda gemm, qd: 10.0)
+    plan = autotune_plan(GEMMS(), measure=True, iters=1, quant=("int8",))
+    assert all(lp.qdtype == "bf16" for lp in plan.layers), \
+        "an over-budget dtype won on speed — the gate must run first"
+
+
+def test_gate_ties_break_to_lower_error(monkeypatch):
+    """int8 and fp8 both cost 1 byte/element, so they tie on traffic; the
+    eligible list is sorted by calibration error and the stable ranking
+    keeps the lower-error dtype first."""
+    errs = {"int8": 0.02, "fp8": 0.002}
+    monkeypatch.setattr(cmu_mod, "measure_quant_error",
+                        lambda gemm, qd: errs[qd])
+    plan = autotune_plan(GEMMS(), measure=False, quant=("int8", "fp8"))
+    assert all(lp.qdtype == "fp8" and lp.qerror == 0.002
+               for lp in plan.layers)
+
+
+def test_real_calibration_admits_both_dtypes():
+    """The real hook on Gaussian weights: int8 lands well under fp8 (3
+    mantissa bits), and both fit the default budget — the empirical fact
+    the default ``QUANT_ERROR_BUDGET`` encodes."""
+    g = GEMMS()[0]
+    e8 = cmu_mod.measure_quant_error(g, "int8")
+    ef8 = cmu_mod.measure_quant_error(g, "fp8")
+    assert e8 < ef8 < cmu_mod.QUANT_ERROR_BUDGET
+    assert e8 < 0.01 and ef8 < 0.04
+
+
+# ---------------------------------------------------------------------------
+# schema: v8 -> v9 migration + incremental quant upgrade
+# ---------------------------------------------------------------------------
+
+
+def _strip_quant_keys(node):
+    """Remove the v9-only keys everywhere — the file a v8 build wrote."""
+    if isinstance(node, dict):
+        node.pop("qdtype", None)
+        node.pop("qerror", None)
+        for v in node.values():
+            _strip_quant_keys(v)
+    elif isinstance(node, list):
+        for v in node:
+            _strip_quant_keys(v)
+
+
+def _as_v8_file(v9_path, v8_path):
+    payload = json.load(open(v9_path))
+    payload["version"] = 8
+    _strip_quant_keys(payload)
+    json.dump(payload, open(v8_path, "w"))
+
+
+def _unquant(lp):
+    dec = ({b: dataclasses.replace(g, qdtype=None, qerror=None)
+            for b, g in lp.decode.items()} if lp.decode else lp.decode)
+    return dataclasses.replace(lp, qdtype=None, qerror=None, decode=dec)
+
+
+def test_v8_cache_loads_bit_for_bit_with_qdtype_none(tmp_path):
+    gemms = GEMMS()
+    plan = autotune_plan(gemms, measure=False, decode_buckets=(8,))
+    v9, v8 = os.path.join(tmp_path, "v9.json"), os.path.join(tmp_path, "v8.json")
+    save_plan(v9, plan)
+    _as_v8_file(v9, v8)
+    loaded = load_plan(v8)
+    assert all(lp.qdtype is None and lp.qerror is None for lp in loaded.layers)
+    assert all(gp.qdtype is None for lp in loaded.layers
+               for gp in lp.decode.values())
+    # every schedule decision identical — dispatch is bit-for-bit (the plan
+    # was never quant-tuned, so its own rows carry qdtype=None already)
+    assert list(loaded.layers) == list(plan.layers)
+    assert loaded.to_json() == plan.to_json()
+    # a quant-less request loads without re-tune...
+    assert plan_matches(loaded, gemms, buckets=(8,))
+    # ...but a quant request does not match as-is
+    assert not plan_matches(loaded, gemms, buckets=(8,), quant=("int8",))
+
+
+def test_v8_cache_upgrades_to_v9_quant_incrementally(tmp_path, monkeypatch):
+    monkeypatch.setattr(cmu_mod, "measure_quant_error", lambda gemm, qd: 1e-3)
+    gemms = GEMMS()
+    plan = autotune_plan(gemms, measure=False, decode_buckets=(8,))
+    v9, v8 = os.path.join(tmp_path, "v9.json"), os.path.join(tmp_path, "v8.json")
+    save_plan(v9, plan)
+    _as_v8_file(v9, v8)
+
+    up, loaded = load_or_autotune(v8, gemms, buckets=(8,), measure=False,
+                                  quant=("int8",))
+    assert not loaded  # it had to annotate the quant verdicts
+    assert up.has_quant((8,))
+    for lp, lp0 in zip(up.layers, plan.layers):
+        assert lp.qdtype in ("int8", "bf16")
+        assert _unquant(lp) == _unquant(lp0), \
+            f"incremental quant upgrade retuned {lp.name}"
+    with open(v8) as f:
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION == 9
+    again, loaded = load_or_autotune(v8, gemms, buckets=(8,), measure=False,
+                                     quant=("int8",))
+    assert loaded  # second launch reloads, no tuning
+
+
+def test_add_quant_subplans_keeps_decisions_verbatim(monkeypatch):
+    monkeypatch.setattr(cmu_mod, "measure_quant_error", lambda gemm, qd: 1e-3)
+    plan = autotune_plan(GEMMS(), measure=False, decode_buckets=(8, 16),
+                         train=True)
+    up = add_quant_subplans(plan, ("int8",), measure=False)
+    assert up.has_quant((8, 16))
+    for lp, lp0 in zip(up.layers, plan.layers):
+        assert _unquant(lp) == _unquant(lp0)
+        # bwd GEMMs stay unquantized: straight-through estimator territory
+        assert lp.bwd_dx == lp0.bwd_dx and lp.bwd_dw == lp0.bwd_dw
+        assert lp.bwd_dx.qdtype is None and lp.bwd_dw.qdtype is None
+    # idempotent: already-annotated rows are untouched
+    assert add_quant_subplans(up, ("int8",), measure=False) == up
+
+
+def test_quant_plan_roundtrips_through_json(monkeypatch):
+    monkeypatch.setattr(cmu_mod, "measure_quant_error", lambda gemm, qd: 1e-3)
+    plan = autotune_plan(GEMMS(), measure=False, decode_buckets=(8,),
+                         quant=("int8", "fp8"))
+    from repro.core import DataflowPlan
+
+    back = DataflowPlan.from_json(plan.to_json())
+    assert list(back.layers) == list(plan.layers)
+    assert back.has_quant((8,))
+
+
+# ---------------------------------------------------------------------------
+# one quantizer: shared scale math + round-trip error bounds
+# ---------------------------------------------------------------------------
+
+
+def test_compression_uses_the_shared_scale_bitwise():
+    """The gradient compressor's per-block scale is ``abs_max_scale`` —
+    bitwise equal to the legacy inline formula it replaced, so error
+    feedback telescopes exactly as before."""
+    g = jnp.asarray(RNG.normal(size=(1000,)) * 0.3, jnp.float32)
+    q, scale, meta = comp.quantize_int8(g)
+    b, _ = comp._blockify(g)
+    legacy = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0 + 1e-12
+    assert _bits(scale) == _bits(legacy)
+    assert _bits(scale) == _bits(abs_max_scale(b, "int8", axis=1))
+
+
+@pytest.mark.parametrize("qd,bound", [("int8", 0.01), ("fp8", 0.04)])
+def test_channel_roundtrip_error_bounds(qd, bound):
+    """Round-trip relative RMS error on Gaussian weights stays within the
+    per-dtype bound the accuracy gate budgets against (int8: ~7.9 bits of
+    mantissa; fp8 e4m3: 3 bits -> ~2.6% per element)."""
+    w = jnp.asarray(np.random.default_rng(qd == "fp8").normal(size=(128, 64)),
+                    jnp.float32)
+    back = dequantize_channel(*quantize_channel(w, qd, axis=0))
+    err = float(jnp.linalg.norm(back - w) / jnp.linalg.norm(w))
+    assert 0.0 < err < bound, (qd, err)
+
+
+def test_compression_roundtrip_error_bound():
+    """Block-int8 gradient compression round-trip: per-element error is at
+    most half a quantization step (scale/2), and the relative RMS error on
+    Gaussian gradients stays under 1%."""
+    g = jnp.asarray(RNG.normal(size=(3000,)) * 0.05, jnp.float32)
+    q, scale, meta = comp.quantize_int8(g)
+    back = comp.dequantize_int8(q, scale, meta)
+    b, _ = comp._blockify(g)
+    step = np.broadcast_to(np.asarray(scale), b.shape).reshape(-1)[:g.size]
+    assert np.all(np.abs(np.asarray(back - g)) <= step / 2 + 1e-9)
+    rel = float(jnp.linalg.norm(back - g) / jnp.linalg.norm(g))
+    assert rel < 0.01, rel

@@ -43,6 +43,7 @@ from repro.core import (
     scan_decode_traffic_bytes,
     scan_traffic_bytes,
 )
+from repro.core.plan_cache import PLAN_CACHE_VERSION
 from repro.core import cmu as cmu_mod
 from repro.kernels import SCAN_SWEEPS, flex_recurrent_step, flex_scan
 from repro.models import get_config
@@ -293,7 +294,7 @@ def test_v7_cache_loads_with_scan_none_and_upgrades(tmp_path):
                 lp.mesh, lp.decode, lp.attention) == before[lp.name], \
             f"incremental scan upgrade retuned {lp.name}"
     with open(path) as f:
-        assert json.load(f)["version"] == 8
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION
     again, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
                                      scan=scan, measure=False)
     assert loaded  # second launch reloads, no tuning

@@ -275,7 +275,7 @@ def test_budget_property_every_candidate_fits_vmem():
         ranked = _ranked_candidates(g, VMEM_BUDGET_BYTES)
         assert ranked
         saw_strip = False
-        for t, df, (bm, bk, bn), strip in ranked:
+        for t, df, (bm, bk, bn), strip, _qd in ranked:
             cost = hbm_traffic_bytes(g, df, bm, bk, bn, strip=strip)
             assert cost.vmem_bytes <= VMEM_BUDGET_BYTES
             # strips charge the f32 accumulator strip PLUS the fused
@@ -299,11 +299,11 @@ def test_strip_beats_streamed_for_deep_k_ws():
     deep-K GEMM becomes a WS/IS strip schedule, not OS."""
     g = GemmShape(8192, 8192, 256)  # tall, deep K, narrow N
     ranked = _ranked_candidates(g, VMEM_BUDGET_BYTES)
-    best_t, best_df, best_blk, best_strip = ranked[0]
+    best_t, best_df, best_blk, best_strip, _qd = ranked[0]
     best = hbm_traffic_bytes(g, best_df, *best_blk, strip=best_strip)
     streamed_best = min(
         hbm_traffic_bytes(g, df, bm, bk, bn).hbm_bytes
-        for _, df, (bm, bk, bn), s in ranked if s == 1
+        for _, df, (bm, bk, bn), s, _q in ranked if s == 1
     )
     assert best.hbm_bytes <= streamed_best
     stripped = [r for r in ranked if r[3] > 1]

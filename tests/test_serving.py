@@ -33,6 +33,7 @@ from repro.core import (
     plan_matches,
     save_plan,
 )
+from repro.core.plan_cache import PLAN_CACHE_VERSION
 from repro.core import cmu as cmu_mod
 from repro.core.cmu import Dataflow, LayerPlan
 from repro.launch.scheduler import (
@@ -251,7 +252,7 @@ def test_v6_roundtrip_and_bucket_lookup(tmp_path):
     path = os.path.join(tmp_path, "plan.json")
     save_plan(path, plan)
     with open(path) as f:
-        assert json.load(f)["version"] == 8
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION
     plan2 = load_plan(path)
     assert plan2.has_decode((8, 16)) and not plan2.has_decode((8, 16, 32))
     assert plan_matches(plan2, GEMMS(cfg), buckets=(8, 16))
@@ -296,7 +297,7 @@ def test_v5_cache_loads_with_decode_none_and_upgrades(tmp_path):
             "incremental bucket upgrade must not retune forward rows"
     # and the upgrade was persisted as the current schema version
     with open(path) as f:
-        assert json.load(f)["version"] == 8
+        assert json.load(f)["version"] == PLAN_CACHE_VERSION
     again, loaded = load_or_autotune(path, GEMMS(cfg), buckets=(8,),
                                      measure=False)
     assert loaded  # second launch reloads, no tuning
